@@ -1,0 +1,49 @@
+"""GGC complexity claim (§3.2): per-client cost is O(B_c) reward probes
+during training (candidates come from Omega_k, |Omega_k| <= B_c), and O(N)
+compute / O(B_c) communication for BGGC preprocessing. We measure wall time
+of the vmapped graph build vs N and B_c."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import all_clients_graph
+from repro.data import make_federated_classification
+from repro.fl.engine import FLEngine
+from repro.models.classifier import MLP
+
+from .common import Bench
+
+
+def run(bench: Bench):
+    for n_clients in (8, 16, 32):
+        data = make_federated_classification(
+            seed=0, n_clients=n_clients, n_clusters=4, feature_dim=16,
+            n_train=16, n_val=16, n_test=16, noise=2.0,
+            assign_level="cluster")
+        eng = FLEngine(MLP(16, 32, 10), data, lr=0.05, batch_size=8)
+        st = eng.init_clients(jax.random.PRNGKey(0))
+        flat = eng.flatten(st)
+        reward = eng.make_reward_fn()
+        for budget in (2, 8):
+            # restrict candidates to B_c as in the training loop
+            rng = np.random.default_rng(0)
+            cand = np.zeros((n_clients, n_clients), bool)
+            for k in range(n_clients):
+                others = np.setdiff1d(np.arange(n_clients), [k])
+                take = min(budget, len(others))
+                cand[k, rng.choice(others, take, replace=False)] = True
+            candj = jnp.asarray(cand)
+
+            def build():
+                adj = all_clients_graph(jax.random.PRNGKey(1), flat, eng.p,
+                                        candj, reward, budget)
+                return jax.block_until_ready(adj)
+
+            build()  # compile
+            t0 = time.time()
+            adj = build()
+            bench.record(f"ggc_scaling/N={n_clients}/B={budget}",
+                         time.time() - t0,
+                         f"edges={int(np.asarray(adj).sum())}")

@@ -1,0 +1,79 @@
+"""Kernel micro-benchmarks (XLA ref path timed on this host; the Pallas
+twins are validated in interpret mode — wall-clock timing of interpret mode
+is meaningless, so `derived` carries the interpret-vs-ref max error)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.graph_mix import graph_mix
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.ssd import ssd
+
+from .common import Bench
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps, out
+
+
+def run(bench: Bench):
+    key = jax.random.PRNGKey(0)
+
+    # graph_mix at FL scale: 100 clients x 0.1M-param CNN
+    N, P = 100, 120_000
+    A = jax.nn.softmax(jax.random.normal(key, (N, N)))
+    W = jax.random.normal(key, (N, P))
+    jref = jax.jit(ref.graph_mix_ref)
+    s, _ = _time(jref, A, W)
+    out_i = graph_mix(A[:8, :8], W[:8, :2048], block_p=512, interpret=True)
+    err = float(jnp.abs(out_i - ref.graph_mix_ref(A[:8, :8],
+                                                  W[:8, :2048])).max())
+    bench.record("kernels/graph_mix_100x120k", s, f"interp_err={err:.2e}")
+
+    # flash attention (ref timing at medium scale; interpret correctness)
+    B, S, Hq, Hkv, hd = 1, 1024, 8, 4, 64
+    q = jax.random.normal(key, (B, S, Hq, hd)) * 0.5
+    k = jax.random.normal(key, (B, S, Hkv, hd)) * 0.5
+    v = jax.random.normal(key, (B, S, Hkv, hd))
+    jatt = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    s, _ = _time(jatt, q, k, v)
+    o = flash_attention(q[:, :256], k[:, :256], v[:, :256], block_q=128,
+                        block_k=128, interpret=True)
+    err = float(jnp.abs(
+        o - ref.flash_attention_ref(q[:, :256], k[:, :256],
+                                    v[:, :256])).max())
+    bench.record("kernels/flash_attention_1k", s, f"interp_err={err:.2e}")
+
+    # rglru scan
+    a = jax.nn.sigmoid(jax.random.normal(key, (2, 2048, 1024))) * 0.2 + 0.79
+    b = jax.random.normal(key, (2, 2048, 1024)) * 0.1
+    jscan = jax.jit(lambda a, b: ref.linear_scan_ref(a, b))
+    s, _ = _time(jscan, a, b)
+    o, _ = rglru_scan(a[:, :256, :256], b[:, :256, :256], block_s=128,
+                      block_w=256, interpret=True)
+    ro, _ = ref.linear_scan_ref(a[:, :256, :256], b[:, :256, :256])
+    bench.record("kernels/rglru_scan_2k_x1k", s,
+                 f"interp_err={float(jnp.abs(o - ro).max()):.2e}")
+
+    # ssd
+    x = jax.random.normal(key, (1, 2048, 8, 64)) * 0.3
+    da = -jnp.abs(jax.random.normal(key, (1, 2048, 8))) * 0.1
+    Bm = jax.random.normal(key, (1, 2048, 64)) * 0.3
+    Cm = jax.random.normal(key, (1, 2048, 64)) * 0.3
+    jssd = jax.jit(lambda *a: ref.ssd_ref(*a, 256))
+    s, _ = _time(jssd, x, da, Bm, Cm)
+    y, _ = ssd(x[:, :256], da[:, :256], Bm[:, :256], Cm[:, :256],
+               chunk=64, interpret=True)
+    yr, _ = ref.ssd_ref(x[:, :256], da[:, :256], Bm[:, :256], Cm[:, :256], 64)
+    bench.record("kernels/ssd_2k", s,
+                 f"interp_err={float(jnp.abs(y - yr).max()):.2e}")

@@ -1,0 +1,49 @@
+"""Shared benchmark scaffolding."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data import make_federated_classification
+from repro.fl.engine import FLEngine
+from repro.models.classifier import MLP
+
+
+def standard_setting(partition="pathological", n_clients=16, seed=0,
+                     **overrides):
+    """The synthetic analogue of the paper's CIFAR10 settings (DESIGN.md §7):
+    cluster-structured heterogeneity + Dir(0.1) or Patho(3) label skew."""
+    kw = dict(seed=seed, n_clients=n_clients, n_clusters=4,
+              partition=partition, alpha=0.1, classes_per_client=3,
+              feature_dim=16, n_train=16, n_val=24, n_test=48, noise=2.0,
+              assign_level="cluster")
+    kw.update(overrides)
+    data = make_federated_classification(**kw)
+    model = MLP(kw["feature_dim"], 32, 10)
+    engine = FLEngine(model, data, lr=0.05, batch_size=8)
+    return model, data, engine
+
+
+class Bench:
+    """Collects (name, us_per_call, derived) rows for run.py's CSV."""
+
+    def __init__(self):
+        self.rows = []
+
+    def record(self, name, seconds, derived):
+        self.rows.append((name, seconds * 1e6, derived))
+
+    def timed(self, name, fn, derived_fn=lambda out: ""):
+        t0 = time.time()
+        out = fn()
+        self.record(name, time.time() - t0, derived_fn(out))
+        return out
+
+    def print_csv(self):
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.1f},{derived}")
+
+
+def fmt_acc(accs: dict) -> str:
+    return ";".join(f"{k}={np.mean(v):.4f}" for k, v in accs.items())

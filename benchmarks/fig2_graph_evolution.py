@@ -1,0 +1,29 @@
+"""Paper Fig. 2 / §G.4: collaboration-graph sparsity and symmetry — initial
+(BGGC preprocessing) vs final rounds, across budgets."""
+import numpy as np
+
+from repro.core import DPFLConfig, graph_stats, run_dpfl
+
+from .common import Bench, standard_setting
+
+
+def run(bench: Bench, n_clients=16):
+    _, data, eng = standard_setting("pathological", n_clients)
+    for budget, tag in ((None, "inf"), (5, "5"), (3, "3")):
+        cfg = DPFLConfig(rounds=8, tau_init=3, tau_train=3, budget=budget,
+                         seed=0)
+        res = bench.timed(f"fig2/B={tag}",
+                          lambda cfg=cfg: run_dpfl(eng, cfg),
+                          lambda r: "")
+        st = graph_stats(res)
+        cl = data.cluster
+        adj = res.graph_history[-1].astype(float)
+        same = adj[cl[:, None] == cl[None, :]].mean()
+        cross = adj[cl[:, None] != cl[None, :]].mean()
+        bench.record(
+            f"fig2/B={tag}/stats", 0.0,
+            f"sparsity0={st['initial_sparsity']:.3f};"
+            f"sparsityT={st['final_sparsity']:.3f};"
+            f"symmetry0={st['initial_symmetry']:.3f};"
+            f"symmetryT={st['final_symmetry']:.3f};"
+            f"same_cluster_edges={same:.3f};cross={cross:.3f}")

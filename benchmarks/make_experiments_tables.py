@@ -1,0 +1,63 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+the dry-run JSON artifacts.
+
+  PYTHONPATH=src python -m benchmarks.make_experiments_tables
+"""
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def main(result_dir="benchmarks/results/dryrun"):
+    recs = [json.load(open(f))
+            for f in sorted(glob.glob(os.path.join(result_dir, "*.json")))]
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+    print("### Dry-run table (per device; single-pod 16x16 unless noted)\n")
+    print("| arch | shape | mesh | status | args/dev | temp/dev | "
+          "flops/dev | HBM bytes/dev | coll bytes/dev | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        arch = r.get("arch", r.get("workload", "?"))
+        shape = r.get("shape", f"N{r.get('clients', '?')}")
+        if r["status"] != "ok":
+            print(f"| {arch} | {shape} | {r['mesh']} | "
+                  f"**{r['status']}** | - | - | - | - | - | - |")
+            continue
+        pd = r["per_device"]
+        mem = r["memory"]
+        print(f"| {arch} | {shape} | {r['mesh']} | ok | "
+              f"{fmt_bytes(mem['argument_bytes'])} | "
+              f"{fmt_bytes(mem['temp_bytes'])} | "
+              f"{pd['flops']:.2e} | {fmt_bytes(pd['hbm_bytes'])} | "
+              f"{fmt_bytes(pd['collective_bytes'])} | "
+              f"{r.get('compile_s', 0):.1f} |")
+
+    print("\n### Roofline table (seconds per step, per device)\n")
+    print("| arch | shape | mesh | compute | memory | collective | "
+          "dominant | model-flops ratio |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        arch = r.get("arch", r.get("workload", "?"))
+        shape = r.get("shape", f"N{r.get('clients', '?')}")
+        rl = r["roofline"]
+        print(f"| {arch} | {shape} | {r['mesh']} | "
+              f"{rl['compute_s']:.4f} | {rl['memory_s']:.4f} | "
+              f"{rl['collective_s']:.4f} | {rl['dominant'][:-2]} | "
+              f"{r.get('model_flops_ratio', 0):.3f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""§Perf hillclimbing harness: lowers variant configurations for the three
+chosen (arch x shape) pairs and records roofline terms per iteration.
+
+  PYTHONPATH=src python -m benchmarks.perf_hillclimb [--pair h1|h2|h3]
+
+Pairs (chosen from the baseline table; rationale in EXPERIMENTS.md §Perf):
+  h1: kimi-k2-1t-a32b x decode_32k  (worst roofline fraction, memory-bound)
+  h2: granite-20b     x train_4k    (most collective-bound)
+  h3: qwen3-4b        x train_4k multi-pod (paper-representative: DPFL
+      cross-pod mixing dominates the collective term)
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = "benchmarks/results/perf"
+
+# (pair, arch, shape, mesh, tag, opts)
+VARIANTS = [
+    # --- H1: memory-bound MoE decode ---
+    ("h1", "kimi-k2-1t-a32b", "decode_32k", "single", "h1_base", {}),
+    ("h1", "kimi-k2-1t-a32b", "decode_32k", "single", "h1_seqshard",
+     {"cache_seq_shard": True}),
+    # --- H2: collective-bound dense train ---
+    ("h2", "granite-20b", "train_4k", "single", "h2_base", {}),
+    ("h2", "granite-20b", "train_4k", "single", "h2_bf16grad",
+     {"grad_dtype": "bfloat16"}),
+    ("h2", "granite-20b", "train_4k", "single", "h2_zero1", {"zero1": True}),
+    ("h2", "granite-20b", "train_4k", "single", "h2_remat_none",
+     {"remat": "none"}),
+    ("h2", "granite-20b", "train_4k", "single", "h2_parallel_zero1",
+     {"parallel_block": True, "zero1": True}),
+    # --- H3: DPFL mixing on the pod axis ---
+    ("h3", "qwen3-4b", "train_4k", "multi", "h3_mix_every_step", {}),
+    ("h3", "qwen3-4b", "train_4k", "multi", "h3_no_mix", {"mix": False}),
+    ("h3", "qwen3-4b", "train_4k", "multi", "h3_fedavg_global",
+     {"fedavg_global": True}),
+]
+
+
+def run_variant(arch, shape, mesh, tag, opts):
+    fn = os.path.join(OUT, f"{arch}_{shape}_{mesh}_{tag}.json")
+    if os.path.exists(fn):
+        return json.load(open(fn))
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", OUT, "--tag", tag,
+         "--opts", json.dumps(opts)],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=2400)
+    if not os.path.exists(fn):
+        raise RuntimeError(f"{tag} failed:\n{r.stdout[-2000:]}\n"
+                           f"{r.stderr[-2000:]}")
+    return json.load(open(fn))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="")
+    args = ap.parse_args()
+    os.makedirs(OUT, exist_ok=True)
+    print("pair,tag,status,compute_s,memory_s,collective_s,dominant,"
+          "coll_bytes,args_bytes")
+    for pair, arch, shape, mesh, tag, opts in VARIANTS:
+        if args.pair and pair != args.pair:
+            continue
+        rec = run_variant(arch, shape, mesh, tag, opts)
+        if rec["status"] != "ok":
+            print(f"{pair},{tag},{rec['status']},,,,,,")
+            continue
+        rl = rec["roofline"]
+        pd = rec["per_device"]
+        print(f"{pair},{tag},ok,{rl['compute_s']:.4f},{rl['memory_s']:.4f},"
+              f"{rl['collective_s']:.4f},{rl['dominant']},"
+              f"{pd['collective_bytes']:.3e},"
+              f"{rec['memory']['argument_bytes']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline):
+three terms per (arch x shape x mesh), dominant bottleneck, model-flops
+ratio, and a one-line what-would-move-it-down note."""
+import glob
+import json
+import os
+
+from .common import Bench
+
+NOTES = {
+    ("compute_s", "train"): "more chips / lower remat recompute",
+    ("compute_s", "prefill"): "more chips or flash-attn MXU efficiency",
+    ("compute_s", "decode"): "batch more requests per step",
+    ("memory_s", "train"): "Pallas flash-attn (no S^2 scores to HBM), "
+                           "ZeRO-1 moments, bf16 master weights",
+    ("memory_s", "prefill"): "Pallas flash-attn removes S^2 score traffic",
+    ("memory_s", "decode"): "shard KV cache over model axis "
+                            "(head-dim split + psum)",
+    ("collective_s", "train"): "overlap TP all-reduce; widen DPFL mixing "
+                               "period P (paper Table 3)",
+    ("collective_s", "prefill"): "reduce-scatter instead of all-reduce",
+    ("collective_s", "decode"): "replicate small weights; avoid gathers",
+}
+
+
+def _kind(shape):
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}.get(shape, "train")
+
+
+def load_records(result_dir="benchmarks/results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def run(bench: Bench, result_dir="benchmarks/results/dryrun"):
+    recs = load_records(result_dir)
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    errors = [r for r in recs if r.get("status") == "error"]
+    for r in ok:
+        rl = r["roofline"]
+        dom = rl["dominant"]
+        arch = r.get("arch", r.get("workload", "?"))
+        shape = r.get("shape", f"N{r.get('clients', '?')}")
+        note = NOTES.get((dom, _kind(shape)), "")
+        bench.record(
+            f"roofline/{arch}/{shape}/{r['mesh']}", 0.0,
+            f"compute={rl['compute_s']:.4f}s;memory={rl['memory_s']:.4f}s;"
+            f"collective={rl['collective_s']:.4f}s;dominant={dom};"
+            f"mfr={r.get('model_flops_ratio', 0):.3f};fix={note}")
+    bench.record("roofline/coverage", 0.0,
+                 f"ok={len(ok)};skipped={len(skipped)};errors={len(errors)}")
+    assert not errors, [
+        (r["arch"], r["shape"], r["mesh"]) for r in errors]

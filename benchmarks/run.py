@@ -1,0 +1,74 @@
+"""Benchmark harness — one module per paper table/figure plus system
+benches. Prints ``name,us_per_call,derived`` CSV rows.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run                # everything
+  PYTHONPATH=src python -m benchmarks.run --only table1,fig3
+  PYTHONPATH=src python -m benchmarks.run --quick        # reduced sizes
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of benchmark names")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller client counts (CI-friendly)")
+    args = ap.parse_args()
+
+    from .common import Bench
+    from . import (appendixA_synergy, bench_ggc_scaling, bench_kernels,
+                   fig2_graph_evolution, fig3_random_graph, fig4_label_flip,
+                   roofline_report, table1_accuracy, table2_tau_init,
+                   table3_periodicity)
+
+    n = 8 if args.quick else 16
+    suite = {
+        "table1": lambda b: table1_accuracy.run(
+            b, partitions=("pathological",) if args.quick
+            else ("pathological", "dirichlet"), n_clients=n),
+        "table2": lambda b: table2_tau_init.run(b, n_clients=n),
+        "table3": lambda b: table3_periodicity.run(b, n_clients=n),
+        "fig2": lambda b: fig2_graph_evolution.run(b, n_clients=n),
+        "fig3": lambda b: fig3_random_graph.run(b, n_clients=n),
+        "fig4": lambda b: fig4_label_flip.run(b, n_clients=10),
+        "appendixA": appendixA_synergy.run,
+        "kernels": bench_kernels.run,
+        "ggc_scaling": bench_ggc_scaling.run,
+        "roofline": roofline_report.run,
+    }
+    only = [s for s in args.only.split(",") if s]
+    bench = Bench()
+    t0 = time.time()
+    failures = []
+    for name, fn in suite.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr, flush=True)
+        try:
+            fn(bench)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            traceback.print_exc()
+            bench.record(f"{name}/FAILED", 0.0, repr(e)[:120])
+        finally:
+            # drop compiled executables between suites — the full run
+            # otherwise accumulates hundreds of jit caches (OOM on small
+            # hosts)
+            import jax
+            jax.clear_caches()
+    print("name,us_per_call,derived")
+    bench.print_csv()
+    print(f"# total wall time {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Table 1: DPFL (4 budgets) vs the 11 baselines, on the synthetic
+analogues of Dir(0.1) and Patho(3). Reports mean test accuracy of
+best-on-validation models, plus the across-client variance (Fig. 1)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DPFLConfig, run_dpfl
+from repro.fl.baselines import BASELINES
+
+from .common import Bench, standard_setting
+
+ROUNDS, TAU = 8, 3
+
+
+def run(bench: Bench, partitions=("pathological", "dirichlet"),
+        n_clients=16, seeds=(0,)):
+    for part in partitions:
+        accs = {}
+        var = {}
+        for seed in seeds:
+            _, data, eng = standard_setting(part, n_clients, seed=seed)
+            for name, fn in BASELINES.items():
+                out = bench.timed(
+                    f"table1/{part}/{name}",
+                    lambda fn=fn: fn(eng, rounds=ROUNDS, tau=TAU, seed=seed),
+                    lambda o: f"acc={np.mean(o['test_acc']):.4f}")
+                accs.setdefault(name, []).append(out["test_acc"].mean())
+                var.setdefault(name, []).append(out["test_acc"].var())
+            for budget, tag in ((None, "inf"), (max(2, n_clients // 5), "0.2N"),
+                                (max(1, n_clients // 10), "0.1N")):
+                cfg = DPFLConfig(rounds=ROUNDS, tau_init=TAU, tau_train=TAU,
+                                 budget=budget, seed=seed)
+                res = bench.timed(
+                    f"table1/{part}/dpfl_B{tag}",
+                    lambda cfg=cfg: run_dpfl(eng, cfg),
+                    lambda r: f"acc={r.test_acc.mean():.4f}")
+                accs.setdefault(f"dpfl_B{tag}", []).append(res.test_acc.mean())
+                var.setdefault(f"dpfl_B{tag}", []).append(res.test_acc.var())
+        summary = {k: float(np.mean(v)) for k, v in accs.items()}
+        order = sorted(summary, key=summary.get, reverse=True)
+        bench.record(f"table1/{part}/summary", 0.0,
+                     ";".join(f"{k}={summary[k]:.4f}" for k in order))
+        bench.record(f"table1/{part}/variance(fig1)", 0.0,
+                     ";".join(f"{k}={np.mean(var[k]):.5f}" for k in order))
+    return accs

@@ -1,0 +1,17 @@
+"""Paper Table 2: sensitivity of DPFL to the preprocessing epochs tau_init,
+across budget constraints."""
+from repro.core import DPFLConfig, run_dpfl
+
+from .common import Bench, standard_setting
+
+
+def run(bench: Bench, n_clients=16):
+    _, data, eng = standard_setting("pathological", n_clients)
+    for tau_init in (1, 3, 6):
+        for budget, tag in ((None, "inf"), (4, "4"), (2, "2")):
+            cfg = DPFLConfig(rounds=6, tau_init=tau_init, tau_train=3,
+                             budget=budget, seed=0)
+            bench.timed(
+                f"table2/tau_init={tau_init}/B={tag}",
+                lambda cfg=cfg: run_dpfl(eng, cfg),
+                lambda r: f"acc={r.test_acc.mean():.4f}")

@@ -1,0 +1,19 @@
+"""Paper Table 3: refreshing C_k every P rounds (GGC invocation
+periodicity) — the accuracy/communication trade-off."""
+from repro.core import DPFLConfig, run_dpfl
+
+from .common import Bench, standard_setting
+
+
+def run(bench: Bench, n_clients=16):
+    _, data, eng = standard_setting("dirichlet", n_clients)
+    for period in (1, 2, 4):
+        for budget, tag in ((None, "inf"), (4, "4")):
+            cfg = DPFLConfig(rounds=8, tau_init=3, tau_train=3,
+                             budget=budget, refresh_period=period, seed=42)
+            bench.timed(
+                f"table3/P={period}/B={tag}",
+                lambda cfg=cfg: run_dpfl(eng, cfg),
+                lambda r: f"acc={r.test_acc.mean():.4f};"
+                          f"downloads_per_round="
+                          f"{sum(r.comm_downloads) / max(len(r.comm_downloads), 1):.1f}")

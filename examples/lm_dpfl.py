@@ -1,0 +1,71 @@
+"""DPFL over transformer LMs: the paper's algorithm composed with the LM
+substrate. Clients hold reduced qwen3-family models; two latent corpus
+clusters (distinct bigram statistics); GGC uses per-client validation
+perplexity as the reward. Shows the collaboration graph recovering the
+corpus clusters.
+
+  PYTHONPATH=src python examples/lm_dpfl.py
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import DPFLConfig, run_dpfl
+from repro.data import make_lm_token_data
+from repro.data.synthetic import FederatedData
+from repro.fl.engine import FLEngine
+from repro.models import build_model
+
+
+def main():
+    n_clients, vocab, seq = 6, 256, 32
+    cfg = get_config("qwen3-0.6b").reduced().replace(
+        n_layers=2, d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+        vocab_size=vocab, head_dim=32, dtype="float32")
+    model = build_model(cfg, loss_chunks=1)
+
+    tokens, cluster_of = make_lm_token_data(
+        seed=0, n_clients=n_clients, vocab=vocab, seq_len=seq, n_seqs=48,
+        n_clusters=2)
+    # adapt LM data into the engine's (x, y) container: x = token block
+    tr, va, te = tokens[:, :24], tokens[:, 24:36], tokens[:, 36:]
+    data = FederatedData(
+        train_x=tr, train_y=np.zeros(tr.shape[:2], np.int32),
+        val_x=va, val_y=np.zeros(va.shape[:2], np.int32),
+        test_x=te, test_y=np.zeros(te.shape[:2], np.int32),
+        p=np.full(n_clients, 1.0 / n_clients), cluster=cluster_of,
+        n_classes=vocab)
+
+    def lm_loss(params, batch):
+        loss, _ = model.loss(params, {"tokens": batch["x"]})
+        return loss
+
+    def lm_acc(params, batch):  # next-token accuracy as the "accuracy"
+        toks = batch["x"]
+        x = model._embed(params, toks[:, :-1])
+        q_pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        from repro.models.common import rms_norm
+        h, _, _ = model._apply_stack(params, x, q_pos, None)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = model._logits(params, h)
+        return (jnp.argmax(logits, -1) == toks[:, 1:]).mean()
+
+    engine = FLEngine(model, data, lr=0.01, batch_size=8,
+                      loss_fn=lm_loss, acc_fn=lm_acc)
+    res = run_dpfl(engine, DPFLConfig(rounds=4, tau_init=2, tau_train=2,
+                                      budget=3, seed=0))
+    adj = res.graph_history[-1].astype(float)
+    cl = cluster_of
+    same = adj[cl[:, None] == cl[None, :]].mean()
+    cross = adj[cl[:, None] != cl[None, :]].mean()
+    print(f"next-token acc per client: "
+          + " ".join(f"{a:.3f}" for a in res.test_acc))
+    print(f"graph edges within corpus-cluster {same:.2f} vs across "
+          f"{cross:.2f}")
+
+
+if __name__ == "__main__":
+    main()

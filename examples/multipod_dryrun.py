@@ -1,0 +1,35 @@
+"""Lower one (arch x shape) onto the production meshes and print the
+memory/cost/roofline summary — a thin, readable wrapper over
+repro.launch.dryrun (which the full 80-combo sweep also uses).
+
+  python examples/multipod_dryrun.py --arch qwen3-0.6b --shape train_4k
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import sys  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_one  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+    for multi in (False, True):
+        rec = run_one(args.arch, args.shape, multi, out_dir=None)
+        rl = rec.get("roofline", {})
+        print(f"\n== {args.arch} x {args.shape} x "
+              f"{'2x16x16 (pod,data,model)' if multi else '16x16 (data,model)'}")
+        print(f"   status={rec['status']}  dominant={rl.get('dominant')}  "
+              f"compute={rl.get('compute_s', 0):.4f}s "
+              f"memory={rl.get('memory_s', 0):.4f}s "
+              f"collective={rl.get('collective_s', 0):.4f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: DPFL vs local-only vs FedAvg on a clustered heterogeneous
+synthetic benchmark, ~2 minutes on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import DPFLConfig, graph_stats, run_dpfl
+from repro.data import make_federated_classification
+from repro.fl.baselines import run_baseline
+from repro.fl.engine import FLEngine
+from repro.models.classifier import MLP
+
+
+def main():
+    data = make_federated_classification(
+        seed=3, n_clients=8, n_clusters=2, partition="pathological",
+        classes_per_client=3, feature_dim=16, n_train=16, n_val=24,
+        n_test=48, noise=2.0, assign_level="cluster")
+    engine = FLEngine(MLP(16, 32, 10), data, lr=0.05, batch_size=8)
+
+    local = run_baseline("local", engine, rounds=8, tau=3, seed=0)
+    fedavg = run_baseline("fedavg", engine, rounds=8, tau=3, seed=0)
+    res = run_dpfl(engine, DPFLConfig(rounds=8, tau_init=3, tau_train=3,
+                                      budget=4, seed=0))
+
+    print(f"{'method':12s} mean-acc  per-client")
+    for name, acc in (("local", local["test_acc"]),
+                      ("fedavg", fedavg["test_acc"]),
+                      ("DPFL(B=4)", res.test_acc)):
+        print(f"{name:12s} {acc.mean():.4f}   "
+              + " ".join(f"{a:.2f}" for a in acc))
+
+    stats = graph_stats(res)
+    print("\ncollaboration graph:", stats)
+    adj = res.graph_history[-1]
+    cl = data.cluster
+    same = adj[cl[:, None] == cl[None, :]].mean()
+    cross = adj[cl[:, None] != cl[None, :]].mean()
+    print(f"edge rate within clusters {same:.2f} vs across {cross:.2f} "
+          "(GGC discovers the hidden clusters)")
+
+
+if __name__ == "__main__":
+    main()

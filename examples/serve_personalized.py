@@ -1,0 +1,64 @@
+"""Personalized serving: batched decode where each request routes to its
+client's personalized model (the DPFL outcome), demonstrated with a reduced
+qwen3-family LM. Client models live in one stacked pytree (leading client
+axis) and the batch gathers its own client's weights via vmap — the same
+layout the multi-pod dry-run shards over the `pod` axis.
+
+  PYTHONPATH=src python examples/serve_personalized.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+
+
+def main():
+    cfg = get_config("qwen3-0.6b").reduced().replace(dtype="float32")
+    model = build_model(cfg)
+    n_clients = 3
+    keys = jax.random.split(jax.random.PRNGKey(0), n_clients)
+    # stand-in for per-client DPFL-personalized weights
+    stacked = jax.vmap(model.init)(keys)
+
+    # a batch of requests, each tagged with its client id
+    reqs = [(0, 7), (1, 3), (2, 11), (0, 2)]
+    client_ids = jnp.asarray([c for c, _ in reqs])
+    prompts = jnp.asarray([[t] * 8 for _, t in reqs], jnp.int32)
+
+    B, S, new = prompts.shape[0], prompts.shape[1], 12
+
+    def prefill_one(cid, prompt):
+        params = jax.tree.map(lambda w: w[cid], stacked)
+        return model.prefill(params, prompt[None], cache_len=S + new)
+
+    logits, caches = jax.vmap(prefill_one)(client_ids, prompts)
+    tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
+
+    def decode_one(cid, cache, token, pos):
+        params = jax.tree.map(lambda w: w[cid], stacked)
+        return model.decode_step(params, cache, token, pos)
+
+    dstep = jax.jit(jax.vmap(decode_one, in_axes=(0, 0, 0, None)))
+    out = [tok]
+    t0 = time.time()
+    for t in range(new - 1):
+        logits, caches = dstep(client_ids, caches, tok[:, None],
+                               jnp.int32(S + t))
+        tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    dt = time.time() - t0
+    toks = jnp.concatenate(out, 1)
+    print(f"served {B} requests x {new} tokens routed to "
+          f"{n_clients} personalized models in {dt:.2f}s")
+    for i, (c, _) in enumerate(reqs):
+        print(f"  req{i} -> client {c}: {toks[i].tolist()}")
+    # personalization check: same prompt, different clients => different text
+    assert not jnp.array_equal(toks[0], toks[2])
+    print("different clients produce different continuations ✓")
+
+
+if __name__ == "__main__":
+    main()

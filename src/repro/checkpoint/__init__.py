@@ -1,0 +1,3 @@
+from .ckpt import load_pytree, save_pytree, CheckpointManager
+
+__all__ = ["save_pytree", "load_pytree", "CheckpointManager"]

@@ -1,0 +1,110 @@
+"""Filesystem checkpointing: pytree <-> .npz + structure JSON.
+
+Supports the paper's protocol of retaining the best-on-validation model per
+client (CheckpointManager.keep_best) and periodic training-state snapshots
+with retention.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _paths_and_leaves(tree):
+    flat = jax.tree_util.tree_leaves_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(path: str, tree: Any, metadata: Optional[dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = _paths_and_leaves(tree)
+    np.savez(path + ".npz", **arrays)
+    treedef = jax.tree_util.tree_structure(tree)
+    meta = {"treedef": str(treedef), "keys": sorted(arrays),
+            "metadata": metadata or {}}
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    data = np.load(path + ".npz")
+    ref = _paths_and_leaves(like)
+    if sorted(data.files) != sorted(ref):
+        missing = set(ref) - set(data.files)
+        extra = set(data.files) - set(ref)
+        raise ValueError(f"checkpoint mismatch: missing={missing} extra={extra}")
+    leaves_with_path = jax.tree_util.tree_leaves_with_path(like)
+    treedef = jax.tree_util.tree_structure(like)
+    new_leaves = []
+    for path_, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_)
+        arr = data[key]
+        if arr.shape != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        new_leaves.append(jnp.asarray(arr, dtype=jnp.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._best_metric = -float("inf")
+
+    def save_step(self, step: int, tree: Any, metadata: Optional[dict] = None):
+        save_pytree(os.path.join(self.dir, f"step_{step:08d}"), tree,
+                    {**(metadata or {}), "step": step})
+        self._gc()
+
+    def keep_best(self, metric: float, tree: Any,
+                  metadata: Optional[dict] = None) -> bool:
+        """Paper §4.1: retain the best model on the validation metric."""
+        if metric <= self._best_metric:
+            return False
+        self._best_metric = metric
+        save_pytree(os.path.join(self.dir, "best"), tree,
+                    {**(metadata or {}), "metric": float(metric)})
+        return True
+
+    def latest_step(self) -> Optional[int]:
+        steps = sorted(int(f[5:13]) for f in os.listdir(self.dir)
+                       if f.startswith("step_") and f.endswith(".json"))
+        return steps[-1] if steps else None
+
+    def restore_latest(self, like: Any):
+        s = self.latest_step()
+        if s is None:
+            return None, None
+        tree = load_pytree(os.path.join(self.dir, f"step_{s:08d}"), like)
+        return s, tree
+
+    def restore_best(self, like: Any):
+        p = os.path.join(self.dir, "best")
+        if not os.path.exists(p + ".npz"):
+            return None
+        return load_pytree(p, like)
+
+    def _gc(self):
+        steps = sorted(int(f[5:13]) for f in os.listdir(self.dir)
+                       if f.startswith("step_") and f.endswith(".json"))
+        for s in steps[: -self.keep]:
+            for ext in (".npz", ".json"):
+                try:
+                    os.remove(os.path.join(self.dir, f"step_{s:08d}{ext}"))
+                except OSError:
+                    pass

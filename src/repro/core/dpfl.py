@@ -1,0 +1,152 @@
+"""DPFL — Algorithm 1 (Decentralized Personalized Federated Learning).
+
+Preprocess: same-init local models, tau_init local epochs, BGGC builds the
+budgeted candidate graph Omega. Training loop: tau_train local epochs, GGC
+re-selects C_k within Omega_k (optionally every P rounds — paper Table 3),
+weighted aggregation over C_k ∪ {k} (Eq. 4). Best-on-validation models are
+retained per client and used for final test accuracy (paper §4.1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..fl.engine import FLEngine
+from .graph import all_clients_graph, make_bggc, mixing_matrix, mix_flat
+
+
+@dataclass
+class DPFLConfig:
+    rounds: int = 20
+    tau_init: int = 10
+    tau_train: int = 5
+    budget: Optional[int] = None      # B_c; None = inf (no constraint)
+    refresh_period: int = 1           # P: run GGC every P rounds (Table 3)
+    seed: int = 0
+    graph_impl: str = "ggc"           # ggc | naive (oracle)
+    random_graph: bool = False        # Fig. 3 ablation: random C_k
+    track_history: bool = True
+
+
+@dataclass
+class DPFLResult:
+    test_acc: np.ndarray              # (N,) per-client acc of best-val model
+    val_acc_history: list = field(default_factory=list)
+    graph_history: list = field(default_factory=list)   # adjacency per round
+    omega: Optional[np.ndarray] = None
+    best_flat: Optional[np.ndarray] = None  # (N, P) best-val client models
+    # communication accounting (models downloaded, the paper's cost unit):
+    # preprocessing BGGC = N-1 per client; each training round = |Omega_k|
+    # when GGC refreshes (needs all candidates) else |C_k| (aggregation only)
+    comm_downloads: list = field(default_factory=list)  # per-round totals
+    comm_preprocess: int = 0
+
+
+def _sparsity(adj: np.ndarray) -> float:
+    n = adj.shape[0]
+    off = adj.sum() - np.trace(adj)
+    return 1.0 - off / (n * (n - 1))
+
+
+def _symmetry(adj: np.ndarray) -> float:
+    a = adj.copy().astype(bool)
+    np.fill_diagonal(a, False)
+    denom = a.sum()
+    return float((a & a.T).sum() / denom) if denom else 1.0
+
+
+def run_dpfl(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
+    data = engine.data
+    N = data.n_clients
+    budget = cfg.budget if cfg.budget is not None else N - 1
+    key = jax.random.PRNGKey(cfg.seed)
+    k_init, k_pre, k_graph, k_train = jax.random.split(key, 4)
+
+    reward_fn = engine.make_reward_fn()
+    p = engine.p
+
+    # ---- preprocess (Alg. 1 lines 1-5)
+    stacked = engine.init_clients(k_init)
+    stacked, _ = engine.local_train(stacked, k_pre, epochs=cfg.tau_init)
+    flat = engine.flatten(stacked)
+
+    full_mask = jnp.ones((N, N), bool)
+    if cfg.random_graph:
+        # Fig. 3 ablation: random Omega_k of size budget
+        rng = np.random.default_rng(cfg.seed)
+        omega = np.zeros((N, N), bool)
+        for k_ in range(N):
+            others = np.setdiff1d(np.arange(N), [k_])
+            sel = rng.choice(others, size=min(budget, N - 1), replace=False)
+            omega[k_, sel] = True
+            omega[k_, k_] = True
+        omega = jnp.asarray(omega)
+    else:
+        # BGGC: batched preprocessing within the communication budget
+        bggc = make_bggc(reward_fn, budget)
+        keys = [jax.random.fold_in(k_graph, i) for i in range(N)]
+        omega = jnp.stack([
+            bggc(keys[k_], jnp.int32(k_), full_mask[k_], flat, p)
+            for k_ in range(N)])
+
+    A = mixing_matrix(omega, p)
+    flat = mix_flat(A, flat)
+    stacked = engine.unflatten(flat)
+
+    best_val = jnp.full((N,), -jnp.inf)
+    best_flat = engine.flatten(stacked)
+    result = DPFLResult(test_acc=None, omega=np.asarray(omega))
+    result.comm_preprocess = N * (N - 1)  # BGGC streams all peers (batched)
+    adj = omega
+
+    # ---- training loop (Alg. 1 lines 6-12)
+    for t in range(cfg.rounds):
+        stacked, _ = engine.local_train(
+            stacked, jax.random.fold_in(k_train, t), epochs=cfg.tau_train)
+        flat = engine.flatten(stacked)
+        refresh = (not cfg.random_graph) and (t % cfg.refresh_period == 0)
+        if refresh:
+            # line 9: download all of Omega_k to run GGC
+            result.comm_downloads.append(
+                int(np.asarray(omega).sum()) - N)
+        else:
+            # aggregation only: download the currently selected C_k
+            result.comm_downloads.append(int(np.asarray(adj).sum()) - N)
+        if cfg.random_graph:
+            adj = omega
+        elif refresh:
+            adj = all_clients_graph(
+                jax.random.fold_in(k_graph, 1000 + t), flat, p, omega,
+                reward_fn, budget, impl=cfg.graph_impl)
+        A = mixing_matrix(adj, p)
+        flat = mix_flat(A, flat)
+        stacked = engine.unflatten(flat)
+
+        val_acc, val_loss = engine.eval_val(stacked)
+        improved = val_acc > best_val
+        best_val = jnp.where(improved, val_acc, best_val)
+        best_flat = jnp.where(improved[:, None], flat, best_flat)
+        if cfg.track_history:
+            result.val_acc_history.append(np.asarray(val_acc))
+            result.graph_history.append(np.asarray(adj))
+
+    best = engine.unflatten(best_flat)
+    test_acc, _ = engine.eval_test(best)
+    result.test_acc = np.asarray(test_acc)
+    result.best_flat = np.asarray(best_flat)
+    return result
+
+
+def graph_stats(result: DPFLResult) -> dict:
+    out = {}
+    if result.omega is not None:
+        out["initial_sparsity"] = _sparsity(result.omega)
+        out["initial_symmetry"] = _symmetry(result.omega)
+    if result.graph_history:
+        out["final_sparsity"] = _sparsity(result.graph_history[-1])
+        out["final_symmetry"] = _symmetry(result.graph_history[-1])
+    return out

@@ -1,0 +1,313 @@
+"""Collaboration-graph construction: GGC (Alg. 2) and BGGC (Alg. 3).
+
+The randomized double-greedy of Fourati et al. adapted to DPFL: for each
+candidate j (in seeded shuffled order) compute the marginal gains of
+*adding* j to the grow-set X and *removing* j from the shrink-set Y, where
+rewards are R(S) = -F_k^V(weighted_avg_{i in S} w_i); accept with
+probability a/(a+b) (p=1 when a=b=0 per the paper), until |C_k| = B_c.
+
+TPU adaptation (DESIGN.md §3): the sequential loop is a seeded `lax.scan`
+carrying (mask_X, mask_Y, w^X, w^Y, p_X, p_Y); the four reward probes per
+step are one vmapped forward. The running sums are exactly BGGC's trick, so
+GGC and BGGC share the decision kernel and Theorem 1 holds by construction
+— and is *tested* against a literal recompute-from-scratch reference
+(`ggc_naive`) plus a batched BGGC (`bggc`) that never holds more than B_c
+client models.
+
+Coin flips use fold_in(key, candidate_id), making the random stream
+independent of batching order — the seeded-randomness premise of Thm 1.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------ mixing
+
+
+def mixing_matrix(adj, p):
+    """adj: (N, N) bool/float, adj[k, i]=1 iff k receives from i (diagonal
+    forced on: every client 'collaborates' with itself). p: (N,) weights.
+    Returns row-stochastic A with A[k, i] = p_i adj[k, i] / sum_j p_j adj[k, j].
+    """
+    adj = jnp.asarray(adj, jnp.float32)
+    n = adj.shape[0]
+    adj = jnp.maximum(adj, jnp.eye(n, dtype=adj.dtype))
+    w = adj * p[None, :]
+    return w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-12)
+
+
+def mix_pytree(A, stacked_params):
+    """w_k <- sum_i A[k,i] w_i on a client-stacked pytree (Eq. 4)."""
+    return jax.tree.map(
+        lambda w: jnp.einsum("ij,j...->i...", A.astype(jnp.float32),
+                             w.astype(jnp.float32)).astype(w.dtype),
+        stacked_params)
+
+
+def mix_flat(A, flat_w, mix_fn=None):
+    """(N, P) client-stacked flattened params. mix_fn may be the Pallas
+    graph_mix kernel; defaults to a plain matmul."""
+    if mix_fn is not None:
+        return mix_fn(A, flat_w)
+    return (A.astype(jnp.float32) @ flat_w.astype(jnp.float32)
+            ).astype(flat_w.dtype)
+
+
+# ----------------------------------------------------------- GGC decisions
+
+
+def make_ggc(reward_fn: Callable, budget: int):
+    """Build the jittable GGC kernel.
+
+    reward_fn(flat_params (P,), client_idx) -> scalar reward (higher =
+    better), i.e. -validation loss for that client.
+
+    Returns ggc(key, k_idx, cand_mask (N,), flat_w (N,P), p (N,)) -> mask_X
+    (N,) bool of selected collaborators INCLUDING k itself.
+    """
+
+    def ggc(key, k_idx, cand_mask, flat_w, p):
+        N = flat_w.shape[0]
+        cand_mask = cand_mask & (jnp.arange(N) != k_idx)
+        maskX = jnp.zeros(N, bool).at[k_idx].set(True)
+        maskY = cand_mask | maskX
+        wX = p[k_idx] * flat_w[k_idx]
+        pX = p[k_idx]
+        wY = jnp.einsum("n,np->p", maskY * p, flat_w)
+        pY = jnp.sum(maskY * p)
+        order = jax.random.permutation(jax.random.fold_in(key, 0), N)
+
+        def body(carry, j):
+            maskX, maskY, wX, wY, pX, pY, nsel = carry
+            is_cand = cand_mask[j]
+            w_j = flat_w[j]
+            p_j = p[j]
+            # four reward probes, batched into one vmapped forward
+            probes = jnp.stack([
+                wX / pX,
+                (wX + p_j * w_j) / (pX + p_j),
+                wY / pY,
+                (wY - p_j * w_j) / jnp.maximum(pY - p_j, 1e-12),
+            ])
+            r = jax.vmap(lambda fw: reward_fn(fw, k_idx))(probes)
+            a = jnp.maximum(r[1] - r[0], 0.0)
+            b = jnp.maximum(r[3] - r[2], 0.0)
+            prob = jnp.where(a + b > 0, a / (a + b), 1.0)
+            u = jax.random.uniform(jax.random.fold_in(key, j + 1))
+            within_budget = nsel < budget
+            add = (u < prob) & is_cand & within_budget
+            rem = (~(u < prob)) & is_cand
+            maskX = maskX.at[j].set(maskX[j] | add)
+            maskY = maskY.at[j].set(maskY[j] & ~rem)
+            wX = jnp.where(add, wX + p_j * w_j, wX)
+            pX = jnp.where(add, pX + p_j, pX)
+            wY = jnp.where(rem, wY - p_j * w_j, wY)
+            pY = jnp.where(rem, pY - p_j, pY)
+            nsel = nsel + add.astype(jnp.int32)
+            return (maskX, maskY, wX, wY, pX, pY, nsel), None
+
+        init = (maskX, maskY, wX, wY, pX, pY, jnp.int32(0))
+        (maskX, *_), _ = jax.lax.scan(body, init, order)
+        return maskX
+
+    return ggc
+
+
+def make_ggc_naive(reward_fn: Callable, budget: int):
+    """Literal Algorithm 2: recompute set averages from scratch each step
+    (no running sums). Oracle for the Theorem-1 equivalence tests."""
+
+    def avg(mask, flat_w, p):
+        w = jnp.einsum("n,np->p", mask * p, flat_w)
+        return w / jnp.maximum(jnp.sum(mask * p), 1e-12)
+
+    def ggc(key, k_idx, cand_mask, flat_w, p):
+        N = flat_w.shape[0]
+        cand_mask = cand_mask & (jnp.arange(N) != k_idx)
+        maskX = jnp.zeros(N, bool).at[k_idx].set(True)
+        maskY = cand_mask | maskX
+        order = jax.random.permutation(jax.random.fold_in(key, 0), N)
+
+        def body(carry, j):
+            maskX, maskY, nsel = carry
+            is_cand = cand_mask[j]
+            p_ = p.astype(jnp.float32)
+            RX = reward_fn(avg(maskX.astype(jnp.float32), flat_w, p_), k_idx)
+            RXj = reward_fn(
+                avg(maskX.at[j].set(True).astype(jnp.float32), flat_w, p_),
+                k_idx)
+            RY = reward_fn(avg(maskY.astype(jnp.float32), flat_w, p_), k_idx)
+            RYj = reward_fn(
+                avg(maskY.at[j].set(False).astype(jnp.float32), flat_w, p_),
+                k_idx)
+            a = jnp.maximum(RXj - RX, 0.0)
+            b = jnp.maximum(RYj - RY, 0.0)
+            prob = jnp.where(a + b > 0, a / (a + b), 1.0)
+            u = jax.random.uniform(jax.random.fold_in(key, j + 1))
+            add = (u < prob) & is_cand & (nsel < budget)
+            rem = (~(u < prob)) & is_cand
+            maskX = maskX.at[j].set(maskX[j] | add)
+            maskY = maskY.at[j].set(maskY[j] & ~rem)
+            return (maskX, maskY, nsel + add.astype(jnp.int32)), None
+
+        init = (maskX, maskY, jnp.int32(0))
+        (maskX, _, _), _ = jax.lax.scan(body, init, order)
+        return maskX
+
+    return ggc
+
+
+def make_bggc(reward_fn: Callable, budget: int):
+    """Batched GGC (Algorithm 3): the preprocessing-phase variant that
+    receives models in batches of <= budget and keeps only the streaming
+    sums w^X / w^Y — never more than O(B_c) model storage.
+
+    The python loop over batches mirrors the two communication phases of
+    Algorithm 3; decisions are the shared seeded kernel, so the output
+    equals GGC's (Theorem 1; tested).
+    """
+
+    def bggc(key, k_idx, cand_mask, flat_w, p):
+        N, P = flat_w.shape
+        cand_mask = jnp.asarray(cand_mask) & (jnp.arange(N) != k_idx)
+        # --- phase 1: stream batches to accumulate w^Y (Alg. 3 lines 2-7)
+        maskY0 = cand_mask | jnp.zeros(N, bool).at[k_idx].set(True)
+        wY = p[k_idx] * flat_w[k_idx]
+        pY = p[k_idx]
+        B = max(int(budget), 1)
+        for s in range(0, N, B):
+            batch = jnp.arange(s, min(s + B, N))
+            m = maskY0[batch] & (batch != k_idx)
+            wY = wY + jnp.einsum("n,np->p", m * p[batch], flat_w[batch])
+            pY = pY + jnp.sum(m * p[batch])
+        # --- phase 2: batched decisions in the SAME shuffled order
+        maskX = jnp.zeros(N, bool).at[k_idx].set(True)
+        maskY = maskY0
+        wX = p[k_idx] * flat_w[k_idx]
+        pX = p[k_idx]
+        nsel = jnp.int32(0)
+        order = jax.random.permutation(jax.random.fold_in(key, 0), N)
+
+        def body(carry, jw):
+            maskX, maskY, wX, wY, pX, pY, nsel = carry
+            j, w_j = jw  # the batch transmits model w_j with its index
+            is_cand = cand_mask[j]
+            p_j = p[j]
+            probes = jnp.stack([
+                wX / pX,
+                (wX + p_j * w_j) / (pX + p_j),
+                wY / pY,
+                (wY - p_j * w_j) / jnp.maximum(pY - p_j, 1e-12),
+            ])
+            r = jax.vmap(lambda fw: reward_fn(fw, k_idx))(probes)
+            a = jnp.maximum(r[1] - r[0], 0.0)
+            b = jnp.maximum(r[3] - r[2], 0.0)
+            prob = jnp.where(a + b > 0, a / (a + b), 1.0)
+            u = jax.random.uniform(jax.random.fold_in(key, j + 1))
+            add = (u < prob) & is_cand & (nsel < budget)
+            rem = (~(u < prob)) & is_cand
+            maskX = maskX.at[j].set(maskX[j] | add)
+            maskY = maskY.at[j].set(maskY[j] & ~rem)
+            wX = jnp.where(add, wX + p_j * w_j, wX)
+            pX = jnp.where(add, pX + p_j, pX)
+            wY = jnp.where(rem, wY - p_j * w_j, wY)
+            pY = jnp.where(rem, pY - p_j, pY)
+            return (maskX, maskY, wX, wY, pX, pY,
+                    nsel + add.astype(jnp.int32)), None
+
+        carry = (maskX, maskY, wX, wY, pX, pY, nsel)
+        for s in range(0, N, B):  # each iteration receives <= B_c models
+            idx = order[s:min(s + B, N)]
+            batch_w = flat_w[idx]  # the only model storage: <= B_c rows
+            carry, _ = jax.lax.scan(body, carry, (idx, batch_w))
+        return carry[0]
+
+    return bggc
+
+
+def all_clients_graph(key, flat_w, p, cand_masks, reward_fn, budget,
+                      impl: str = "ggc"):
+    """Run graph construction for every client (vmap over k).
+
+    cand_masks: (N, N) bool, row k = Omega_k. Returns adjacency (N, N) bool
+    with adj[k, i]=1 iff i selected for k (diag True)."""
+    N = flat_w.shape[0]
+    maker = {"ggc": make_ggc, "naive": make_ggc_naive}[impl]
+    ggc = maker(reward_fn, budget)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(N))
+    return jax.vmap(ggc, in_axes=(0, 0, 0, None, None))(
+        keys, jnp.arange(N), cand_masks, flat_w, p)
+
+
+def make_ggc_heterogeneous(reward_fn: Callable, max_budget: int):
+    """Beyond-paper extension (the paper's §Limitations, implemented):
+    per-client budgets B_c^k — the budget enters as a traced scalar so
+    one compiled kernel serves every client.
+
+    Returns ggc(key, k_idx, cand_mask, flat_w, p, budget_k) -> mask_X."""
+    base = make_ggc(reward_fn, max_budget)
+
+    def ggc(key, k_idx, cand_mask, flat_w, p, budget_k):
+        N = flat_w.shape[0]
+        cand_mask = cand_mask & (jnp.arange(N) != k_idx)
+        maskX = jnp.zeros(N, bool).at[k_idx].set(True)
+        maskY = cand_mask | maskX
+        wX = p[k_idx] * flat_w[k_idx]
+        pX = p[k_idx]
+        wY = jnp.einsum("n,np->p", maskY * p, flat_w)
+        pY = jnp.sum(maskY * p)
+        order = jax.random.permutation(jax.random.fold_in(key, 0), N)
+
+        def body(carry, j):
+            maskX, maskY, wX, wY, pX, pY, nsel = carry
+            is_cand = cand_mask[j]
+            w_j = flat_w[j]
+            p_j = p[j]
+            probes = jnp.stack([
+                wX / pX,
+                (wX + p_j * w_j) / (pX + p_j),
+                wY / pY,
+                (wY - p_j * w_j) / jnp.maximum(pY - p_j, 1e-12),
+            ])
+            r = jax.vmap(lambda fw: reward_fn(fw, k_idx))(probes)
+            a = jnp.maximum(r[1] - r[0], 0.0)
+            b = jnp.maximum(r[3] - r[2], 0.0)
+            prob = jnp.where(a + b > 0, a / (a + b), 1.0)
+            u = jax.random.uniform(jax.random.fold_in(key, j + 1))
+            add = (u < prob) & is_cand & (nsel < budget_k)
+            rem = (~(u < prob)) & is_cand
+            maskX = maskX.at[j].set(maskX[j] | add)
+            maskY = maskY.at[j].set(maskY[j] & ~rem)
+            wX = jnp.where(add, wX + p_j * w_j, wX)
+            pX = jnp.where(add, pX + p_j, pX)
+            wY = jnp.where(rem, wY - p_j * w_j, wY)
+            pY = jnp.where(rem, pY - p_j, pY)
+            return (maskX, maskY, wX, wY, pX, pY,
+                    nsel + add.astype(jnp.int32)), None
+
+        init = (maskX, maskY, wX, wY, pX, pY, jnp.int32(0))
+        (maskX, *_), _ = jax.lax.scan(body, init, order)
+        return maskX
+
+    del base
+    return ggc
+
+
+def all_clients_graph_heterogeneous(key, flat_w, p, cand_masks, reward_fn,
+                                    budgets, reachability=None):
+    """Per-client budgets + optional communicability restriction (both
+    from the paper's §Limitations). budgets: (N,) int32; reachability:
+    (N, N) bool — client k may only ever talk to reachable peers."""
+    N = flat_w.shape[0]
+    if reachability is not None:
+        cand_masks = cand_masks & reachability
+    ggc = make_ggc_heterogeneous(reward_fn, int(jnp.max(budgets)))
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(N))
+    return jax.vmap(ggc, in_axes=(0, 0, 0, None, None, 0))(
+        keys, jnp.arange(N), cand_masks, flat_w, p,
+        jnp.asarray(budgets, jnp.int32))

@@ -1,0 +1,4 @@
+from .engine import FLEngine
+from .baselines import BASELINES, run_baseline
+
+__all__ = ["FLEngine", "BASELINES", "run_baseline"]

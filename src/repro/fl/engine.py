@@ -1,0 +1,134 @@
+"""Stacked-client federated simulation engine.
+
+All N client models live in one pytree with leading client axis; local
+training is vmapped; aggregation is a mixing-matrix einsum (optionally the
+Pallas graph_mix kernel on flattened params). This is the TPU-native
+reformulation of the paper's sequential single-GPU client loop (DESIGN.md
+§3) — on the production mesh the client axis shards over 'pod'.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from ..models.classifier import accuracy as _acc
+from ..models.classifier import xent_loss as _xent
+from ..optim import Optimizer, sgd
+
+
+class FLEngine:
+    def __init__(self, model, data, lr: float = 0.05, momentum: float = 0.9,
+                 weight_decay: float = 1e-3, batch_size: int = 16,
+                 loss_fn: Optional[Callable] = None,
+                 acc_fn: Optional[Callable] = None):
+        self.model = model
+        self.data = data
+        self.batch_size = min(batch_size, data.train_x.shape[1])
+        self.opt: Optimizer = sgd(lr, momentum=momentum,
+                                  weight_decay=weight_decay)
+        self.loss_fn = loss_fn or (lambda p, b: _xent(model, p, b))
+        self.acc_fn = acc_fn or (lambda p, b: _acc(model, p, b))
+        self.p = jnp.asarray(data.p, jnp.float32)
+        # flatten/unflatten for graph ops
+        example = model.init(jax.random.PRNGKey(0))
+        flat, self._unravel = ravel_pytree(example)
+        self.n_params = flat.shape[0]
+        self._build()
+
+    # ------------------------------------------------------------ plumbing
+    def init_clients(self, key):
+        """Same init for all clients (paper Alg. 1: every local model starts
+        from w)."""
+        params = self.model.init(key)
+        N = self.data.n_clients
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (N,) + a.shape).copy(),
+            params)
+
+    def flatten(self, stacked):
+        return jax.vmap(lambda t: ravel_pytree(t)[0])(stacked)
+
+    def unflatten(self, flat):
+        return jax.vmap(self._unravel)(flat)
+
+    def _build(self):
+        model, opt = self.model, self.opt
+        bs = self.batch_size
+        loss_fn = self.loss_fn
+
+        def sgd_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = jax.tree.map(lambda p, u: p + u, params, updates)
+            return params, opt_state, loss
+
+        def one_client_epochs(params, x, y, key, epochs):
+            n = x.shape[0]
+            nb = n // bs
+            opt_state = opt.init(params)
+
+            def epoch(carry, ekey):
+                params, opt_state = carry
+                perm = jax.random.permutation(ekey, n)
+                xb = x[perm[: nb * bs]].reshape((nb, bs) + x.shape[1:])
+                yb = y[perm[: nb * bs]].reshape((nb, bs) + y.shape[1:])
+
+                def step(c, b):
+                    p, o = c
+                    p, o, l = sgd_step(p, o, {"x": b[0], "y": b[1]})
+                    return (p, o), l
+
+                (params, opt_state), losses = jax.lax.scan(
+                    step, (params, opt_state), (xb, yb))
+                return (params, opt_state), losses.mean()
+
+            (params, _), losses = jax.lax.scan(
+                epoch, (params, opt_state), jax.random.split(key, epochs))
+            return params, losses.mean()
+
+        @functools.partial(jax.jit, static_argnames=("epochs",))
+        def local_train(stacked, key, epochs):
+            N = self.data.n_clients
+            keys = jax.random.split(key, N)
+            return jax.vmap(
+                lambda p, x, y, k: one_client_epochs(p, x, y, k, epochs)
+            )(stacked, jnp.asarray(self.data.train_x),
+              jnp.asarray(self.data.train_y), keys)
+
+        self.local_train = local_train
+
+        @jax.jit
+        def eval_split(stacked, xs, ys):
+            return (jax.vmap(lambda p, x, y: self.acc_fn(p, {"x": x, "y": y}))
+                    (stacked, xs, ys),
+                    jax.vmap(lambda p, x, y: loss_fn(p, {"x": x, "y": y}))
+                    (stacked, xs, ys))
+
+        self._eval_split = eval_split
+
+    # ------------------------------------------------------------- metrics
+    def eval_val(self, stacked):
+        return self._eval_split(stacked, jnp.asarray(self.data.val_x),
+                                jnp.asarray(self.data.val_y))
+
+    def eval_test(self, stacked):
+        return self._eval_split(stacked, jnp.asarray(self.data.test_x),
+                                jnp.asarray(self.data.test_y))
+
+    def make_reward_fn(self):
+        """reward(flat_params, k) = -validation loss of client k (Eq. 7)."""
+        val_x = jnp.asarray(self.data.val_x)
+        val_y = jnp.asarray(self.data.val_y)
+        unravel = self._unravel
+        loss_fn = self.loss_fn
+
+        def reward(flat, k):
+            params = unravel(flat)
+            return -loss_fn(params, {"x": val_x[k], "y": val_y[k]})
+
+        return reward

@@ -1,0 +1,13 @@
+"""Pallas-TPU kernels for the perf-critical hot spots, each with a pure-jnp
+oracle in ref.py and a dispatching wrapper in ops.py:
+
+  graph_mix       — DPFL mixing-matrix aggregation (the paper's hot spot)
+  flash_attention — causal GQA + sliding window, online softmax
+  rglru_scan      — RG-LRU first-order linear recurrence
+  ssd             — Mamba2 state-space-duality chunked scan
+"""
+from . import ops, ref
+from .ops import flash_attention, graph_mix, rglru_scan, ssd
+
+__all__ = ["ops", "ref", "graph_mix", "flash_attention", "rglru_scan",
+           "ssd"]

@@ -1,0 +1,116 @@
+"""Pallas-TPU flash attention: causal GQA with optional sliding window.
+
+Online-softmax over KV panels with fp32 running (m, l, acc) in VMEM
+scratch; the (Sq, Sk) score matrix never touches HBM — this is the fix for
+the memory-bound attention terms in EXPERIMENTS.md §Roofline. Grid is
+(B, Hq, nq, nk) with the KV axis innermost (sequential on TPU), so scratch
+carries across KV panels. Fully-masked panels (beyond causal frontier or
+before the sliding window) are skipped via pl.when.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, bq, bk, nk, causal, window):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * bq
+    k_start = ik * bk
+    # panel-level skip predicates (positions are aligned arange)
+    run = jnp.bool_(True)
+    if causal:
+        run = run & (k_start <= q_start + bq - 1)
+    if window is not None:
+        run = run & (k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask = mask & (kp <= qp)
+        if window is not None:
+            mask = mask & (kp > qp - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                           # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _out():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, Sq, Hq, hd); k, v: (B, Sk, Hkv, hd) with Hq % Hkv == 0 and
+    aligned positions (training/prefill layout). Returns (B, Sq, Hq, hd)."""
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    if Sq % bq or Sk % bk:
+        raise ValueError(f"seq ({Sq},{Sk}) must divide blocks ({bq},{bk})")
+    nq, nk = Sq // bq, Sk // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    qt = q.transpose(0, 2, 1, 3)  # (B, Hq, Sq, hd)
+    kt = k.transpose(0, 2, 1, 3)  # (B, Hkv, Sk, hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, scale=scale, bq=bq, bk=bk, nk=nk,
+                               causal=causal, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // rep, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((bq, hd), jnp.float32),  # running accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

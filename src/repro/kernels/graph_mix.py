@@ -1,0 +1,45 @@
+"""Pallas-TPU kernel for DPFL collaboration-graph aggregation (Eq. 4).
+
+Computes ``out = A @ W`` where A is the (N, N) row-stochastic mixing matrix
+and W the (N, P) client-stacked flattened parameters — the paper's
+aggregation hot-spot (it runs once per round per client, and 4x per GGC
+probe). N is small (clients); P is huge (model size), so we tile P into
+VMEM-sized column panels and keep A resident in VMEM. Accumulation in fp32
+regardless of the parameter dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, w_ref, o_ref):
+    a = a_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.dot(a, w, preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def graph_mix(A, W, *, block_p: int = 2048, interpret: bool = False):
+    """A: (N, N); W: (N, P). Returns (N, P) = A @ W."""
+    N, P = W.shape
+    bp = min(block_p, P)
+    pad = (-P) % bp
+    Wp = jnp.pad(W, ((0, 0), (0, pad))) if pad else W
+    Pp = P + pad
+    out = pl.pallas_call(
+        _kernel,
+        grid=(Pp // bp,),
+        in_specs=[
+            pl.BlockSpec((N, N), lambda i: (0, 0)),       # A resident
+            pl.BlockSpec((N, bp), lambda i: (0, i)),      # panel of W
+        ],
+        out_specs=pl.BlockSpec((N, bp), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((N, Pp), W.dtype),
+        interpret=interpret,
+    )(A, Wp)
+    return out[:, :P] if pad else out

@@ -1,0 +1,59 @@
+"""Public kernel ops with implementation dispatch.
+
+impl resolution order: explicit arg > REPRO_KERNEL_IMPL env > platform
+default ('pallas' on TPU, 'ref' elsewhere — 'interpret' runs the Pallas
+kernel body in Python on CPU and is what the test-suite sweeps use).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .graph_mix import graph_mix as _graph_mix
+from .rglru_scan import rglru_scan as _rglru_scan
+from .ssd import ssd as _ssd
+
+
+def _impl(impl: Optional[str]) -> str:
+    if impl:
+        return impl
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def graph_mix(A, W, impl: Optional[str] = None, **kw):
+    m = _impl(impl)
+    if m == "ref":
+        return ref.graph_mix_ref(A, W)
+    return _graph_mix(A, W, interpret=(m == "interpret"), **kw)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    impl: Optional[str] = None, **kw):
+    m = _impl(impl)
+    if m == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash(q, k, v, causal=causal, window=window,
+                  interpret=(m == "interpret"), **kw)
+
+
+def rglru_scan(a, b, h0=None, impl: Optional[str] = None, **kw):
+    m = _impl(impl)
+    if m == "ref":
+        return ref.linear_scan_ref(a, b, h0)
+    return _rglru_scan(a, b, h0, interpret=(m == "interpret"), **kw)
+
+
+def ssd(x, dlogA, B, C, chunk: int = 256, h0=None,
+        impl: Optional[str] = None, **kw):
+    m = _impl(impl)
+    if m == "ref":
+        return ref.ssd_ref(x, dlogA, B, C, chunk, h0)
+    return _ssd(x, dlogA, B, C, chunk=chunk, h0=h0,
+                interpret=(m == "interpret"), **kw)

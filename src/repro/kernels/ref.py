@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the exact functions the model substrate executes on CPU and
+inside the 512-device dry-run compiles; each kernel in this package is
+asserted allclose against them across shape/dtype sweeps in
+tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.common import attention_ref as _attention_ref
+from ..models.rglru import linear_scan_ref as _linear_scan_ref
+from ..models.ssm import ssd_ref as _ssd_ref
+
+
+def graph_mix_ref(A, W):
+    """A: (N, N) row-stochastic mixing matrix; W: (N, P) client-stacked
+    flattened params. Returns A @ W in fp32, cast back to W.dtype."""
+    return (A.astype(jnp.float32) @ W.astype(jnp.float32)).astype(W.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B, Sq, Hq, hd); k, v: (B, Sk, Hkv, hd); aligned positions
+    (q_pos = kv_pos = arange(S))."""
+    B, Sq = q.shape[0], q.shape[1]
+    Sk = k.shape[1]
+    q_pos = jnp.arange(Sq, dtype=jnp.int32)
+    kv_pos = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32)[None], (B, Sk))
+    return _attention_ref(q, k, v, q_pos, kv_pos, causal=causal,
+                          window=window, q_chunk=1 << 30)
+
+
+linear_scan_ref = _linear_scan_ref
+ssd_ref = _ssd_ref

@@ -1,0 +1,300 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the very first lines: jax locks the device count on first init.
+# This is set ONLY here — smoke tests and benches see the real single CPU.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCH_IDS  # noqa: E402
+from ..configs.shapes import SHAPES, get_shape  # noqa: E402
+from ..models import build_model  # noqa: E402
+from ..optim import adamw  # noqa: E402
+from ..roofline import analyze_compiled  # noqa: E402
+from ..sharding.rules import (add_client_axis, cache_specs,  # noqa: E402
+                              param_specs)
+from .mesh import make_production_mesh  # noqa: E402
+from .specs import (batch_spec_tree, input_specs,  # noqa: E402
+                    resolve_arch_for_shape)
+from .steps import (make_decode_step, make_dpfl_mix,  # noqa: E402
+                    make_prefill_step, make_train_step)
+
+
+def _stack_abs(tree, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype), tree)
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def model_flops_estimate(params_abs, cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference); MoE uses N_active."""
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params_abs):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        last = str(path[-1])
+        if "we_" in last:
+            expert += n
+    n_active = total - expert
+    if cfg.n_experts:
+        n_active += expert * cfg.topk / cfg.n_experts
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:
+        tokens = shape.global_batch  # one new token per sequence
+        factor = 2.0
+    return factor * n_active * tokens
+
+
+def build_lowered(arch: str, shape_name: str, multi_pod: bool,
+                  opts=None):
+    """Build and .lower() the step for one (arch, shape, mesh) combo.
+
+    Returns (lowered, meta). Sharding/config choices are overridable through
+    ``opts`` (used by the §Perf hillclimbing harness).
+    """
+    opts = opts or {}
+    cfg = resolve_arch_for_shape(arch, shape_name)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+
+    n_clients = 2 if (multi_pod and shape.global_batch >= 2) else 1
+    if opts.get("fedavg_global"):
+        # comparator: one global model data-parallel across BOTH pods —
+        # the FedAvg-style communication pattern DPFL's pod-local training
+        # + sparse mixing replaces (§Perf H3)
+        n_clients = 1
+    client_axis = "pod" if n_clients > 1 else None
+    data_axes = ("data",)
+    if multi_pod and n_clients == 1 and shape.global_batch >= 32:
+        data_axes = ("pod", "data")
+    moe_data_axes = data_axes if shape.global_batch >= 16 else ()
+    extra = {}
+    if cfg.family != "audio":
+        extra["moe_data_axes"] = moe_data_axes
+        if opts.get("cache_seq_shard"):
+            extra["decode_cache_seqshard"] = True
+        if opts.get("parallel_block"):
+            extra["parallel_block"] = True
+    model = build_model(
+        cfg, mesh=mesh, vocab_pad_multiple=opts.get("vocab_pad", 2048),
+        remat=opts.get("remat", "full"),
+        loss_chunks=opts.get("loss_chunks", 8), **extra)
+
+    pspecs = param_specs(model, cfg, mesh)
+    params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    # MODEL_FLOPS from *per-client* params (the global token count already
+    # spans all clients, so stacking must not double-count parameters)
+    mflops = model_flops_estimate(params_abs, cfg, shape)
+    if n_clients > 1:
+        params_abs = _stack_abs(params_abs, n_clients)
+        pspecs = add_client_axis(pspecs)
+
+    binputs = input_specs(cfg, shape, per_client=n_clients,
+                          dtype=model.dtype)
+    bspecs = batch_spec_tree(cfg, shape, data_axes=data_axes,
+                             client_axis=client_axis)
+
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": chips, "n_clients": n_clients,
+        "window": model.window if hasattr(model, "window") else None,
+        "model_flops": mflops,
+        "opts": {k: v for k, v in opts.items()},
+    }
+
+    if shape.kind == "train":
+        optimizer = adamw(opts.get("lr", 3e-4),
+                          state_dtype=jnp.dtype(opts.get(
+                              "opt_dtype", "float32")))
+        base = make_train_step(model, optimizer,
+                               grad_dtype=opts.get("grad_dtype"))
+        ospecs = {"mu": pspecs, "nu": pspecs,
+                  "count": P(client_axis) if client_axis else P()}
+        if opts.get("zero1"):
+            # ZeRO-1: additionally shard optimizer moments over 'data' on
+            # the largest divisible axis (see §Perf in EXPERIMENTS.md)
+            zp = _zero1(pspecs, params_abs, client_axis)
+            ospecs = {"mu": zp, "nu": zp,
+                      "count": P(client_axis) if client_axis else P()}
+        if n_clients > 1:
+            opt_abs = jax.eval_shape(jax.vmap(optimizer.init), params_abs)
+            vstep = jax.vmap(base, spmd_axis_name="pod")
+            mix_every = opts.get("mix", True)
+
+            def step(params, opt_state, batch, mix_matrix):
+                params, opt_state, loss = vstep(params, opt_state, batch)
+                if mix_every:
+                    params = make_dpfl_mix(mix_matrix)(params)
+                return params, opt_state, loss
+
+            args = (params_abs, opt_abs, binputs,
+                    jax.ShapeDtypeStruct((n_clients, n_clients), jnp.float32))
+            in_specs = (pspecs, ospecs, bspecs, P(None, None))
+            out_specs = (pspecs, ospecs, P(client_axis))
+        else:
+            opt_abs = jax.eval_shape(optimizer.init, params_abs)
+            step = base
+            args = (params_abs, opt_abs, binputs)
+            in_specs = (pspecs, ospecs, bspecs)
+            out_specs = (pspecs, ospecs, P())
+        jf = jax.jit(step, in_shardings=_named(mesh, in_specs),
+                     out_shardings=_named(mesh, out_specs))
+        lowered = jf.lower(*args)
+        return lowered, meta
+
+    if shape.kind == "prefill":
+        base = make_prefill_step(model, cfg)
+        if n_clients > 1:
+            step = jax.vmap(base, spmd_axis_name="pod")
+        else:
+            step = base
+        jf = jax.jit(step, in_shardings=_named(mesh, (pspecs, bspecs)))
+        lowered = jf.lower(params_abs, binputs)
+        return lowered, meta
+
+    # decode
+    B = shape.global_batch // n_clients
+    C = shape.seq_len
+    cache_abs = jax.eval_shape(lambda: model.init_cache(B, C))
+    cspecs = cache_specs(model, cfg, B, C,
+                         shard_seq=(shape.global_batch == 1),
+                         shard_seq_model=bool(opts.get("cache_seq_shard")))
+    if n_clients > 1:
+        cache_abs = _stack_abs(cache_abs, n_clients)
+        cspecs = add_client_axis(cspecs)
+    base = make_decode_step(model, cfg)
+    tok_abs = binputs["token"]
+    pos_abs = binputs["pos"]
+    tok_spec = bspecs["token"]
+
+    if cfg.family == "audio":
+        enc_abs = binputs["enc_out"]
+        enc_spec = bspecs["enc_out"]
+        if n_clients > 1:
+            step = jax.vmap(base, in_axes=(0, 0, 0, 0, None),
+                            spmd_axis_name="pod")
+        else:
+            step = base
+        args = (params_abs, enc_abs, cache_abs, tok_abs, pos_abs)
+        in_specs = (pspecs, enc_spec, cspecs, tok_spec, P())
+        jf = jax.jit(step, in_shardings=_named(mesh, in_specs))
+        lowered = jf.lower(*args)
+        return lowered, meta
+
+    if n_clients > 1:
+        step = jax.vmap(base, in_axes=(0, 0, 0, None), spmd_axis_name="pod")
+    else:
+        step = base
+    args = (params_abs, cache_abs, tok_abs, pos_abs)
+    in_specs = (pspecs, cspecs, tok_spec, P())
+    jf = jax.jit(step, in_shardings=_named(mesh, in_specs))
+    lowered = jf.lower(*args)
+    return lowered, meta
+
+
+def _zero1(pspecs, params_abs, client_axis):
+    """Shard optimizer moments additionally over 'data' on the largest
+    axis not already sharded (divisibility permitting)."""
+    def f(spec, leaf):
+        spec = tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec)))
+        dims = list(spec)
+        best, best_d = -1, 0
+        start = 1 if client_axis else 0
+        for i in range(start, leaf.ndim):
+            if dims[i] is None and leaf.shape[i] % 16 == 0 \
+                    and leaf.shape[i] > best_d:
+                best, best_d = i, leaf.shape[i]
+        if best >= 0:
+            dims[best] = "data"
+        return P(*dims)
+    return jax.tree.map(f, pspecs, params_abs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def run_one(arch, shape_name, multi_pod, out_dir, opts=None, tag=""):
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single", "tag": tag}
+    try:
+        lowered, meta = build_lowered(arch, shape_name, multi_pod, opts)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        print(f"[{arch} x {shape_name} x {rec['mesh']}] memory_analysis:",
+              mem)
+        cost = compiled.cost_analysis()
+        print(f"[{arch} x {shape_name} x {rec['mesh']}] cost_analysis flops:",
+              (cost[0] if isinstance(cost, list) else cost).get("flops"))
+        rec.update(meta)
+        rec.update(analyze_compiled(compiled, meta["chips"],
+                                    meta["model_flops"]))
+        rec["lower_s"] = t1 - t0
+        rec["compile_s"] = t2 - t1
+        rec["status"] = "ok"
+    except NotImplementedError as e:
+        rec["status"] = "skipped"
+        rec["reason"] = str(e)
+        print(f"[{arch} x {shape_name}] SKIP: {e}")
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{arch} x {shape_name} x {rec['mesh']}] ERROR: {e}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fn = os.path.join(
+            out_dir, f"{arch}_{shape_name}_{rec['mesh']}{suffix}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--opts", default="{}",
+                    help="JSON dict of build options (remat, zero1, ...)")
+    args = ap.parse_args()
+    opts = json.loads(args.opts)
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for a in archs:
+        for s in shapes:
+            rec = run_one(a, s, args.mesh == "multi", args.out, opts,
+                          args.tag)
+            st = rec.get("status")
+            r = rec.get("roofline", {})
+            print(f"== {a} x {s} x {args.mesh}: {st}"
+                  + (f" dominant={r.get('dominant')}" if st == "ok" else ""))
+
+
+if __name__ == "__main__":
+    main()

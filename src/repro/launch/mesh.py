@@ -1,0 +1,29 @@
+"""Production meshes. TPU v5e: 16x16 = 256 chips/pod; 2 pods = 512 chips.
+
+A FUNCTION (not a module constant) so importing never touches jax device
+state. The dry-run entrypoint sets XLA_FLAGS for 512 host devices *before*
+any jax import; everything else sees the real (single-CPU) device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """1x1 mesh on the real local device(s) — used by smoke tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware model used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link (~ per-direction, 1 link)

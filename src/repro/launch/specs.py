@@ -1,0 +1,107 @@
+"""Abstract input stand-ins (ShapeDtypeStruct) + shardings per
+(architecture x input shape x mesh) — the dry-run's contract.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs import get_config
+from ..configs.base import ArchConfig
+from ..configs.shapes import InputShape, get_shape
+from ..sharding.rules import add_client_axis, cache_specs, param_specs
+
+TOK = jnp.int32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def resolve_arch_for_shape(arch: str, shape_name: str,
+                           swa_window: int = 4096) -> ArchConfig:
+    """Apply the long_500k sliding-window variant where required; raise for
+    the documented whisper skip."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if shape.name == "long_500k":
+        if cfg.family == "audio":
+            raise NotImplementedError(
+                "whisper-medium x long_500k is skipped by design: the decoder"
+                " cross-attends to <=1500 encoder frames and generates <=448"
+                " tokens; a 524288-token decoder cache contradicts the"
+                " architecture (DESIGN.md §5).")
+        if not cfg.supports_long_context:
+            cfg = cfg.with_window(swa_window)
+    return cfg
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, *, per_client=1,
+                dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for every model input of this (arch, shape).
+
+    per_client: number of DPFL clients stacked on a leading axis (multi-pod
+    dry-run); 1 => no client axis.
+    """
+    C = per_client
+    B = shape.global_batch // max(C, 1)
+    S = shape.seq_len
+    d = cfg.d_model
+
+    def cl(shp):
+        return (C,) + tuple(shp) if C > 1 else tuple(shp)
+
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            t = S - cfg.n_vision_tokens
+            return {"tokens": sds(cl((B, t + 1)), TOK),
+                    "vision": sds(cl((B, cfg.n_vision_tokens, d)), dtype)}
+        if cfg.family == "audio":
+            return {"tokens": sds(cl((B, S + 1)), TOK),
+                    "frames": sds(cl((B, cfg.n_audio_frames, d)), dtype)}
+        return {"tokens": sds(cl((B, S + 1)), TOK)}
+
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            return {"tokens": sds(cl((B, S - cfg.n_vision_tokens)), TOK),
+                    "vision": sds(cl((B, cfg.n_vision_tokens, d)), dtype)}
+        if cfg.family == "audio":
+            return {"tokens": sds(cl((B, S)), TOK),
+                    "frames": sds(cl((B, cfg.n_audio_frames, d)), dtype)}
+        return {"tokens": sds(cl((B, S)), TOK)}
+
+    # decode: one new token against a cache of seq_len
+    out = {"token": sds(cl((B, 1)), TOK), "pos": sds((), TOK)}
+    if cfg.family == "audio":
+        out["enc_out"] = sds(cl((B, cfg.n_audio_frames, d)), dtype)
+    return out
+
+
+def batch_spec_tree(cfg: ArchConfig, shape: InputShape, data_axes=("data",),
+                    client_axis: Optional[str] = None):
+    """PartitionSpecs matching input_specs structure."""
+    B = shape.global_batch
+    shard_b = B > 1 and B >= 16  # don't shard tiny batches
+    da = tuple(data_axes)
+    b = da if shard_b else ()
+
+    def wrap(*tail):
+        lead = (client_axis,) if client_axis else ()
+        return P(*(lead + tail))
+
+    bt = wrap(b if b else None, None)
+    b3 = wrap(b if b else None, None, None)
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": bt}
+        if cfg.family == "vlm":
+            out["vision"] = b3
+        if cfg.family == "audio":
+            out["frames"] = b3
+        return out
+    out = {"token": bt, "pos": P()}
+    if cfg.family == "audio":
+        out["enc_out"] = b3
+    return out

@@ -1,0 +1,70 @@
+"""Step functions lowered by the dry-run / executed by the drivers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import apply_updates
+
+
+def make_train_step(model, optimizer, grad_dtype=None):
+    """grad_dtype: cast gradients before the optimizer (e.g. bf16 — halves
+    the data-parallel all-reduce bytes; §Perf lever)."""
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, aux = model.loss(p, batch)
+            return loss, aux
+
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        if grad_dtype is not None:
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.dtype(grad_dtype)), grads)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(model, cfg):
+    fam = cfg.family
+
+    if fam == "audio":
+        def step(params, batch):
+            return model.prefill(params, batch["tokens"], batch["frames"])
+    elif fam == "vlm":
+        def step(params, batch):
+            return model.prefill(params, batch["tokens"],
+                                 vision=batch["vision"])
+    else:
+        def step(params, batch):
+            return model.prefill(params, batch["tokens"])
+    return step
+
+
+def make_decode_step(model, cfg):
+    fam = cfg.family
+
+    if fam == "audio":
+        def step(params, enc_out, caches, token, pos):
+            logits, (_, caches) = model.decode_step(
+                params, (enc_out, caches), token, pos)
+            return logits, caches
+    else:
+        def step(params, caches, token, pos):
+            return model.decode_step(params, caches, token, pos)
+    return step
+
+
+def make_dpfl_mix(mix_matrix):
+    """Cross-client (cross-pod) DPFL aggregation: w_k <- sum_i A[k,i] w_i.
+
+    mix_matrix: (C, C) row-stochastic (built by repro.core.graph from the
+    GGC-selected collaboration sets). Applied to client-stacked params."""
+    def mix(stacked_params):
+        return jax.tree.map(
+            lambda w: jnp.einsum(
+                "ij,j...->i...", mix_matrix.astype(jnp.float32),
+                w.astype(jnp.float32)).astype(w.dtype),
+            stacked_params)
+    return mix

@@ -1,0 +1,82 @@
+"""Single-host LM training driver (any --arch, optionally reduced).
+
+The federated end-to-end driver (the paper's kind) is
+examples/train_dpfl.py; this driver exercises the LM substrate directly:
+synthetic bigram corpus -> AdamW -> checkpoints.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+      --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..configs import ARCH_IDS, get_config
+from ..data import make_lm_token_data
+from ..models import build_model
+from ..optim import adamw, apply_updates, warmup_cosine
+from .steps import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale variant (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = cfg.replace(dtype="float32")
+    model = build_model(cfg, loss_chunks=4)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.2f}M "
+          f"family={cfg.family}")
+
+    tokens, _ = make_lm_token_data(
+        seed=0, n_clients=1, vocab=min(cfg.vocab_size, 4096),
+        seq_len=args.seq, n_seqs=max(args.batch * 8, 64))
+    corpus = jnp.asarray(tokens[0])  # (n_seqs, seq+1)
+
+    optimizer = adamw(warmup_cosine(args.lr, 10, args.steps))
+    opt_state = optimizer.init(params)
+    step_fn = jax.jit(make_train_step(model, optimizer))
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for step in range(args.steps):
+        idx = rng.integers(0, corpus.shape[0], args.batch)
+        batch = {"tokens": corpus[idx]}
+        if cfg.family == "vlm":
+            batch["vision"] = jnp.zeros(
+                (args.batch, cfg.n_vision_tokens, cfg.d_model))
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (args.batch, cfg.n_audio_frames, cfg.d_model))
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+        if mgr and (step + 1) % args.ckpt_every == 0:
+            mgr.save_step(step + 1, params, {"loss": float(loss)})
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

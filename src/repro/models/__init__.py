@@ -1,0 +1,16 @@
+"""Model zoo: build any assigned architecture from its config."""
+from ..configs.base import ArchConfig
+from .classifier import MLP, PaperCNN, accuracy, xent_loss
+from .lm import DecoderLM
+from .whisper import WhisperModel
+
+
+def build_model(cfg: ArchConfig, mesh=None, **kw):
+    if cfg.family == "audio":
+        kw.pop("attn_window", None)
+        return WhisperModel(cfg, mesh=mesh, **kw)
+    return DecoderLM(cfg, mesh=mesh, **kw)
+
+
+__all__ = ["build_model", "DecoderLM", "WhisperModel", "PaperCNN", "MLP",
+           "xent_loss", "accuracy"]

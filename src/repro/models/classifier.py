@@ -1,0 +1,103 @@
+"""Classifier models for the federated-learning experiments.
+
+``PaperCNN`` is the paper's CIFAR10 model (App. F.3.2): 3 conv-ish layers
+(2 conv + pool) + 2 fully-connected + output head. ``MLP`` is a cheap
+substitute used by fast unit tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+
+def _conv(x, w, b):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+class PaperCNN:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, key):
+        c = self.cfg
+        ks = jax.random.split(key, 5)
+        sz = c.image_size
+        sz = (sz - 4) // 2       # conv5 + pool
+        sz = (sz - 4) // 2       # conv5 + pool
+        flat = sz * sz * c.c2
+        return {
+            "conv1_w": dense_init(ks[0], (5, 5, c.in_channels, c.c1), jnp.float32,
+                                  scale=0.1),
+            "conv1_b": jnp.zeros((c.c1,), jnp.float32),
+            "conv2_w": dense_init(ks[1], (5, 5, c.c1, c.c2), jnp.float32,
+                                  scale=0.1),
+            "conv2_b": jnp.zeros((c.c2,), jnp.float32),
+            "fc1_w": dense_init(ks[2], (flat, c.fc1), jnp.float32),
+            "fc1_b": jnp.zeros((c.fc1,), jnp.float32),
+            "fc2_w": dense_init(ks[3], (c.fc1, c.fc2), jnp.float32),
+            "fc2_b": jnp.zeros((c.fc2,), jnp.float32),
+            "out_w": dense_init(ks[4], (c.fc2, c.n_classes), jnp.float32),
+            "out_b": jnp.zeros((c.n_classes,), jnp.float32),
+        }
+
+    def logits(self, params, x):
+        """x: (B, H, W, C) float32."""
+        h = jax.nn.relu(_conv(x, params["conv1_w"], params["conv1_b"]))
+        h = _maxpool2(h)
+        h = jax.nn.relu(_conv(h, params["conv2_w"], params["conv2_b"]))
+        h = _maxpool2(h)
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(h @ params["fc1_w"] + params["fc1_b"])
+        h = jax.nn.relu(h @ params["fc2_w"] + params["fc2_b"])
+        return h @ params["out_w"] + params["out_b"]
+
+    # body/head split used by FedRep
+    HEAD_KEYS = ("out_w", "out_b")
+
+
+class MLP:
+    """Small MLP on flattened features; used for fast FL tests."""
+
+    def __init__(self, in_dim: int, hidden: int, n_classes: int):
+        self.in_dim, self.hidden, self.n_classes = in_dim, hidden, n_classes
+
+    def init(self, key):
+        ks = jax.random.split(key, 3)
+        return {
+            "w1": dense_init(ks[0], (self.in_dim, self.hidden), jnp.float32),
+            "b1": jnp.zeros((self.hidden,), jnp.float32),
+            "w2": dense_init(ks[1], (self.hidden, self.hidden), jnp.float32),
+            "b2": jnp.zeros((self.hidden,), jnp.float32),
+            "out_w": dense_init(ks[2], (self.hidden, self.n_classes), jnp.float32),
+            "out_b": jnp.zeros((self.n_classes,), jnp.float32),
+        }
+
+    def logits(self, params, x):
+        h = jax.nn.relu(x @ params["w1"] + params["b1"])
+        h = jax.nn.relu(h @ params["w2"] + params["b2"])
+        return h @ params["out_w"] + params["out_b"]
+
+    HEAD_KEYS = ("out_w", "out_b")
+
+
+def xent_loss(model, params, batch):
+    """batch: {"x": features, "y": (B,) int32}. Mean CE."""
+    logits = model.logits(params, batch["x"])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    return nll.mean()
+
+
+def accuracy(model, params, batch):
+    logits = model.logits(params, batch["x"])
+    return (jnp.argmax(logits, -1) == batch["y"]).mean()

@@ -1,0 +1,172 @@
+"""Shared neural building blocks (pure-jnp reference path).
+
+These are the XLA implementations used inside the 512-device dry-run
+compiles and on CPU. Perf-critical hot spots have Pallas-TPU twins under
+``repro.kernels`` validated against these in tests.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------- init
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------- rope
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, d_model: int):
+    """Any-length sinusoidal embedding; positions (..., S) -> (..., S, d)."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (math.log(10000.0) / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------- attention
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q, k, v, q_pos, kv_pos, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+):
+    """Grouped-query attention with absolute-position masking.
+
+    q: (B, Sq, Hq, hd); k, v: (B, Sk, Hkv, hd)
+    q_pos: (Sq,) or (B, Sq); kv_pos: (B, Sk) absolute positions, -1 = invalid
+    (ring-buffer slots not yet written). window: tokens attend to positions
+    in (q_pos - window, q_pos].
+    """
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None, :], (B, Sq))
+
+    qg = q.reshape(B, Sq, Hkv, rep, hd)
+
+    def chunk_attn(args):
+        qc, qp = args  # (B, c, Hkv, rep, hd), (B, c)
+        # operands stay in their storage dtype (bf16 K/V never materialize
+        # an f32 copy — critical for decode-cache traffic, §Perf H1-a);
+        # accumulation is f32 via preferred_element_type, as the MXU does.
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qc, k,
+                       preferred_element_type=jnp.float32) * scale
+        valid = kv_pos[:, None, :] >= 0
+        mask = valid
+        if causal:
+            mask = mask & (kv_pos[:, None, :] <= qp[:, :, None])
+        if window is not None:
+            mask = mask & (kv_pos[:, None, :] > qp[:, :, None] - window)
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.astype(q.dtype)
+
+    if Sq > q_chunk and Sq % q_chunk == 0:
+        nc = Sq // q_chunk
+        qs = qg.reshape(B, nc, q_chunk, Hkv, rep, hd).transpose(1, 0, 2, 3, 4, 5)
+        ps = q_pos.reshape(B, nc, q_chunk).transpose(1, 0, 2)
+        out = jax.lax.map(chunk_attn, (qs, ps))  # (nc, B, c, Hkv, rep, hd)
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hkv, rep, hd)
+    else:
+        out = chunk_attn((qg, q_pos))
+    return out.reshape(B, Sq, Hq, hd)
+
+
+# ---------------------------------------------------------------------- mlp
+
+
+def swiglu(x, wi_gate, wi_up, wo):
+    h = jax.nn.silu(x @ wi_gate) * (x @ wi_up)
+    return h @ wo
+
+
+def gelu_mlp(x, wi, bi, wo, bo):
+    h = jax.nn.gelu(x @ wi + bi, approximate=True)
+    return h @ wo + bo
+
+
+# --------------------------------------------------------------------- loss
+
+
+def chunked_softmax_xent(logits_fn, x, labels, mask, n_chunks: int = 8):
+    """Next-token CE computed over sequence chunks to bound logits memory.
+
+    logits_fn: (B, c, d) -> (B, c, V) (the unembedding); x: (B, S, d);
+    labels: (B, S) int32; mask: (B, S) {0,1} float or bool.
+    Returns (mean_loss, total_weight).
+    """
+    B, S, _ = x.shape
+    if S % n_chunks != 0:
+        n_chunks = 1
+    c = S // n_chunks
+
+    def body(carry, idx):
+        tot, wsum = carry
+        xs = jax.lax.dynamic_slice_in_dim(x, idx * c, c, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, idx * c, c, axis=1)
+        ms = jax.lax.dynamic_slice_in_dim(mask, idx * c, c, axis=1)
+        logits = logits_fn(xs).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        nll = (lse - picked) * ms
+        return (tot + nll.sum(), wsum + ms.sum()), None
+
+    (tot, wsum), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), jnp.arange(n_chunks))
+    return tot / jnp.maximum(wsum, 1.0), wsum

@@ -1,0 +1,91 @@
+"""RG-LRU recurrent blocks (Griffin / RecurrentGemma). [arXiv:2402.19427]
+
+``linear_scan_ref`` (first-order linear recurrence via associative scan) is
+the oracle for the Pallas ``rglru_scan`` kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm
+from .ssm import depthwise_causal_conv
+
+RGLRU_C = 8.0
+
+
+def linear_scan_ref(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t over axis 1. a, b: (B, S, W) fp32.
+    Returns (h (B,S,W), h_last (B,W))."""
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    aa, bb = jax.lax.associative_scan(comb, (a, b), axis=1)
+    h = bb if h0 is None else bb + aa * h0[:, None, :]
+    return h, h[:, -1, :]
+
+
+def rglru(v, p, h0=None, scan_fn=None):
+    """RG-LRU recurrence. v: (B, S, W). Returns (out, h_last)."""
+    vf = v.astype(jnp.float32)
+    r = jax.nn.sigmoid(vf @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(vf @ p["wx"].astype(jnp.float32) + p["bx"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r  # (B,S,W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * vf)
+    fn = scan_fn if scan_fn is not None else linear_scan_ref
+    h, h_last = fn(a, gated, h0)
+    return h.astype(v.dtype), h_last
+
+
+def init_rec_block(key, cfg, dtype):
+    d, W = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a ~ U[0.9, 0.999]^c (Griffin's stable init)
+    u = jax.random.uniform(ks[5], (W,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / RGLRU_C) - 1.0)  # softplus^-1
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "w_gate": dense_init(ks[0], (d, W), dtype),
+        "w_lin": dense_init(ks[1], (d, W), dtype),
+        "conv_w": dense_init(ks[2], (cfg.ssm_conv, W), dtype, scale=0.2),
+        "wa": dense_init(ks[3], (W, W), jnp.float32),
+        "ba": jnp.zeros((W,), jnp.float32),
+        "wx": dense_init(ks[4], (W, W), jnp.float32),
+        "bx": jnp.zeros((W,), jnp.float32),
+        "lam": lam,
+        "w_out": dense_init(key, (W, d), dtype),
+    }
+
+
+def rec_block(p, x, cfg, cache=None, scan_fn=None):
+    """Griffin recurrent block. cache (decode): {"h": (B,W), "conv": (B,K-1,W)}."""
+    B, S, d = x.shape
+    K = cfg.ssm_conv
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    y = jax.nn.gelu(xn @ p["w_gate"], approximate=True)
+    v = xn @ p["w_lin"]
+
+    if cache is None:
+        v_raw = v
+        v = depthwise_causal_conv(v, p["conv_w"])
+        out, h_last = rglru(v, p, scan_fn=scan_fn)
+        new_cache = None
+        if S >= K - 1:
+            new_cache = {"h": h_last, "conv": v_raw[:, S - (K - 1):, :]}
+    else:
+        conv_in = jnp.concatenate([cache["conv"], v], axis=1)  # (B,K,W)
+        v_t = jnp.einsum("bkw,kw->bw", conv_in, p["conv_w"])[:, None]
+        out, h_last = rglru(v_t, p, h0=cache["h"], scan_fn=scan_fn)
+        new_cache = {"h": h_last, "conv": conv_in[:, 1:, :]}
+
+    return x + (y * out) @ p["w_out"], new_cache
+
+
+def init_rec_cache(cfg, batch: int, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.lru_width), dtype),
+    }

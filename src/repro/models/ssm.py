@@ -1,0 +1,185 @@
+"""Mamba2 (SSD — state-space duality) blocks. [arXiv:2405.21060]
+
+``ssd_ref`` is the chunked SSD algorithm (the paper's "minimal" discrete
+form) in pure jnp; it doubles as the oracle for the Pallas ``ssd`` kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm
+
+
+# ------------------------------------------------------------------ ssd core
+
+
+def segsum(x):
+    """x: (..., L) -> (..., L, L) with out[i,j] = sum_{j<k<=i} x[k]; -inf above diag."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(L)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_ref(x, dlogA, B, C, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (b, l, h, p) (already dt-scaled input); dlogA: (b, l, h) per-step log
+    decay (= dt * A, A < 0); B, C: (b, l, n) single-group SSM projections.
+    Returns (y (b, l, h, p), h_last (b, h, p, n)).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    L = min(chunk, l)
+    if l % L != 0:
+        raise ValueError(f"seq {l} not divisible by chunk {L}")
+    c = l // L
+
+    xc = x.reshape(b, c, L, h, p)
+    Bc = B.reshape(b, c, L, n)
+    Cc = C.reshape(b, c, L, n)
+    Ac = dlogA.reshape(b, c, L, h).transpose(0, 3, 1, 2)  # (b, h, c, L)
+    A_cumsum = jnp.cumsum(Ac, axis=-1)
+
+    # 1. intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(segsum(Ac))  # (b, h, c, L, L)
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, Lmat, xc)
+
+    # 2. per-chunk final states
+    decay_states = jnp.exp(A_cumsum[..., -1:] - A_cumsum)  # (b, h, c, L)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xc)
+
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(A_cumsum[..., -1])  # (b, h, c)
+    init = jnp.zeros((b, h, p, n), x.dtype) if h0 is None else h0
+
+    def scan_fn(hprev, inp):
+        st, dec = inp  # (b, h, p, n), (b, h)
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    sts = states.transpose(1, 0, 2, 3, 4)  # (c, b, h, p, n)
+    decs = chunk_decay.transpose(2, 0, 1)  # (c, b, h)
+    h_last, prev_states = jax.lax.scan(scan_fn, init, (sts, decs))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b, c, h, p, n)
+
+    # 4. contribution of carried-in states
+    state_decay_out = jnp.exp(A_cumsum)  # (b, h, c, L)
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev_states, state_decay_out)
+    y = (Y_diag + Y_off).reshape(b, l, h, p)
+    return y, h_last
+
+
+def ssd_decode_step(h, x_t, dlogA_t, B_t, C_t):
+    """One-token SSD update. h: (b,h,p,n); x_t: (b,h,p); dlogA_t: (b,h);
+    B_t, C_t: (b,n). Returns (y_t (b,h,p), h')."""
+    dec = jnp.exp(dlogA_t)[..., None, None]
+    h = h * dec + jnp.einsum("bhp,bn->bhpn", x_t, B_t)
+    y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+    return y, h
+
+
+# -------------------------------------------------------------- mamba2 block
+
+
+def depthwise_causal_conv(x, w):
+    """x: (B, S, C); w: (K, C) -> causal depthwise conv."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out
+
+
+def mamba_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_headdim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return d_in, H, conv_dim
+
+
+def init_mamba_block(key, cfg, dtype):
+    d = cfg.d_model
+    d_in, H, conv_dim = mamba_dims(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * cfg.ssm_state + H), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim), dtype, scale=0.2),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[2], (d_in, d), dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    d_in, H, _ = mamba_dims(cfg)
+    n = cfg.ssm_state
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + d_in + 2 * n]
+    dt = zxbcdt[..., -H:]
+    return z, xBC, dt
+
+
+def mamba_block(p, x, cfg, cache=None, ssd_fn=None):
+    """x: (B, S, d). cache: None (train/prefill from scratch) or
+    {"h": (B,H,hd,n), "conv": (B, K-1, conv_dim)} for decode (S==1).
+    Returns (y, new_cache_or_None)."""
+    B_, S, d = x.shape
+    d_in, H, conv_dim = mamba_dims(cfg)
+    n, hd = cfg.ssm_state, cfg.ssm_headdim
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = xn @ p["in_proj"]
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+
+    if cache is None:
+        xBC_raw = xBC
+        xBC = jax.nn.silu(depthwise_causal_conv(xBC, p["conv_w"]))
+        xs = xBC[..., :d_in].reshape(B_, S, H, hd)
+        Bmat = xBC[..., d_in:d_in + n].astype(jnp.float32)
+        Cmat = xBC[..., d_in + n:].astype(jnp.float32)
+        x_dt = (xs.astype(jnp.float32) * dt[..., None])
+        dlogA = dt * A  # (B,S,H)
+        fn = ssd_fn if ssd_fn is not None else ssd_ref
+        y, h_last = fn(x_dt, dlogA, Bmat, Cmat, cfg.ssm_chunk)
+        y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+        new_cache = None
+        if S >= cfg.ssm_conv - 1:
+            new_cache = {"h": h_last,
+                         "conv": xBC_raw[:, S - (cfg.ssm_conv - 1):, :]}
+    else:
+        conv_in = jnp.concatenate([cache["conv"], xBC], axis=1)  # (B, K, C)
+        xBC_t = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_in, p["conv_w"]))
+        # conv state stores *pre-conv* projections; matches train-path cache
+        xs = xBC_t[:, :d_in].reshape(B_, H, hd)
+        Bt = xBC_t[:, d_in:d_in + n].astype(jnp.float32)
+        Ct = xBC_t[:, d_in + n:].astype(jnp.float32)
+        dt1 = dt[:, 0]  # (B,H)
+        y, h = ssd_decode_step(cache["h"], xs.astype(jnp.float32) * dt1[..., None],
+                               dt1 * A, Bt, Ct)
+        y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+        y = y[:, None]  # (B,1,H,hd)
+        new_cache = {"h": h, "conv": conv_in[:, 1:, :]}
+
+    y = y.reshape(B_, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm_w"], cfg.norm_eps)
+    return x + y @ p["out_proj"], new_cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    d_in, H, conv_dim = mamba_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, H, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }

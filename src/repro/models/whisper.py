@@ -1,0 +1,240 @@
+"""Whisper-style encoder-decoder. [arXiv:2212.04356]
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment:
+``input_specs`` provides precomputed frame embeddings (B, n_frames, d).
+Positional encoding is sinusoidal-any-length (adaptation noted in config).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import (attention_ref, chunked_softmax_xent, dense_init,
+                     embed_init, layer_norm, sinusoidal_positions, NEG_INF)
+
+
+def _init_attn(key, cfg, dtype, kv_d=None):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H = cfg.n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, H * hd), dtype),
+        "wk": dense_init(ks[1], (kv_d or d, H * hd), dtype),
+        "wv": dense_init(ks[2], (kv_d or d, H * hd), dtype),
+        "wo": dense_init(ks[3], (H * hd, d), dtype),
+    }
+
+
+def _init_mlp(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "wi": dense_init(ks[0], (cfg.d_model, cfg.d_ff), dtype),
+        "bi": jnp.zeros((cfg.d_ff,), dtype),
+        "wo": dense_init(ks[1], (cfg.d_ff, cfg.d_model), dtype),
+        "bo": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def _ln(cfg, dtype):
+    return {"w": jnp.ones((cfg.d_model,), dtype),
+            "b": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def _init_enc_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {"ln1": _ln(cfg, dtype), "attn": _init_attn(ks[0], cfg, dtype),
+            "ln2": _ln(cfg, dtype), "mlp": _init_mlp(ks[1], cfg, dtype)}
+
+
+def _init_dec_layer(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    return {"ln1": _ln(cfg, dtype), "self_attn": _init_attn(ks[0], cfg, dtype),
+            "ln2": _ln(cfg, dtype), "cross_attn": _init_attn(ks[1], cfg, dtype),
+            "ln3": _ln(cfg, dtype), "mlp": _init_mlp(ks[2], cfg, dtype)}
+
+
+def _mha(p, xq, xkv, q_pos, kv_pos, cfg, causal, cache=None):
+    B, Sq, d = xq.shape
+    hd, H = cfg.resolved_head_dim, cfg.n_heads
+    q = (xq @ p["wq"]).reshape(B, Sq, H, hd)
+    if cache is not None and "k" in cache and xkv is None:
+        k, v = cache["k"], cache["v"]
+        kv_pos_ = cache["pos"]
+    else:
+        Sk = xkv.shape[1]
+        k = (xkv @ p["wk"]).reshape(B, Sk, H, hd)
+        v = (xkv @ p["wv"]).reshape(B, Sk, H, hd)
+        kv_pos_ = jnp.broadcast_to(kv_pos[None, :], (B, Sk))
+    out = attention_ref(q, k, v, q_pos, kv_pos_, causal=causal)
+    return out.reshape(B, Sq, H * hd) @ p["wo"], (k, v, kv_pos_)
+
+
+class WhisperModel:
+    def __init__(self, cfg: ArchConfig, mesh=None, remat: str = "full",
+                 vocab_pad_multiple: int = 1, loss_chunks: int = 8):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.remat = remat
+        self.vp = cfg.padded_vocab(vocab_pad_multiple) if vocab_pad_multiple > 1 \
+            else cfg.vocab_size
+        self.loss_chunks = loss_chunks
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    def init(self, key):
+        cfg, dtype = self.cfg, self.dtype
+        ks = jax.random.split(key, 4)
+        enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+        dec_keys = jax.random.split(ks[1], cfg.n_layers)
+        return {
+            "tok_embed": embed_init(ks[2], (self.vp, cfg.d_model), dtype),
+            "enc_layers": jax.vmap(
+                lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys),
+            "dec_layers": jax.vmap(
+                lambda k: _init_dec_layer(k, cfg, dtype))(dec_keys),
+            "enc_norm": _ln(cfg, dtype),
+            "dec_norm": _ln(cfg, dtype),
+        }
+
+    # ------------------------------------------------------------- encoder
+    def encode(self, params, frames):
+        """frames: (B, T, d) stubbed conv-frontend output."""
+        cfg = self.cfg
+        T = frames.shape[1]
+        pos = sinusoidal_positions(jnp.arange(T), cfg.d_model).astype(frames.dtype)
+        x = frames + pos[None]
+        pos_ids = jnp.arange(T, dtype=jnp.int32)
+
+        def body(x, lp):
+            def blk(lp, x):
+                h, _ = _mha(lp["attn"],
+                            layer_norm(x, lp["ln1"]["w"], lp["ln1"]["b"]),
+                            layer_norm(x, lp["ln1"]["w"], lp["ln1"]["b"]),
+                            pos_ids, pos_ids, cfg, causal=False)
+                x = x + h
+                xn = layer_norm(x, lp["ln2"]["w"], lp["ln2"]["b"])
+                m = lp["mlp"]
+                h = jax.nn.gelu(xn @ m["wi"] + m["bi"], approximate=True)
+                return x + h @ m["wo"] + m["bo"]
+            if self.remat == "full":
+                blk = jax.checkpoint(blk)
+            return blk(lp, x), None
+
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return layer_norm(x, params["enc_norm"]["w"], params["enc_norm"]["b"])
+
+    # ------------------------------------------------------------- decoder
+    def _dec_stack(self, params, x, enc_out, q_pos, caches=None):
+        cfg = self.cfg
+        enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+        def body(x, inp):
+            lp, lc = inp
+
+            def blk(lp, lc, x):
+                B, Sq, _ = x.shape
+                xn = layer_norm(x, lp["ln1"]["w"], lp["ln1"]["b"])
+                if lc is None:
+                    h, _ = _mha(lp["self_attn"], xn, xn, q_pos, q_pos, cfg,
+                                causal=True)
+                    nc = None
+                else:
+                    hd, H = cfg.resolved_head_dim, cfg.n_heads
+                    k = (xn @ lp["self_attn"]["wk"]).reshape(B, Sq, H, hd)
+                    v = (xn @ lp["self_attn"]["wv"]).reshape(B, Sq, H, hd)
+                    C = lc["k"].shape[1]
+                    slot = q_pos[0] % C
+                    ck = jax.lax.dynamic_update_slice_in_dim(lc["k"], k, slot, 1)
+                    cv = jax.lax.dynamic_update_slice_in_dim(lc["v"], v, slot, 1)
+                    cpos = jax.lax.dynamic_update_slice_in_dim(
+                        lc["pos"],
+                        jnp.broadcast_to(q_pos[None, :], (B, Sq)).astype(jnp.int32),
+                        slot, 1)
+                    q = (xn @ lp["self_attn"]["wq"]).reshape(B, Sq, H, hd)
+                    o = attention_ref(q, ck, cv, q_pos, cpos, causal=True)
+                    h = o.reshape(B, Sq, H * hd) @ lp["self_attn"]["wo"]
+                    nc = {"k": ck, "v": cv, "pos": cpos}
+                x = x + h
+                xn = layer_norm(x, lp["ln2"]["w"], lp["ln2"]["b"])
+                h, _ = _mha(lp["cross_attn"], xn, enc_out, q_pos, enc_pos, cfg,
+                            causal=False)
+                x = x + h
+                xn = layer_norm(x, lp["ln3"]["w"], lp["ln3"]["b"])
+                m = lp["mlp"]
+                h = jax.nn.gelu(xn @ m["wi"] + m["bi"], approximate=True)
+                return x + h @ m["wo"] + m["bo"], nc
+
+            if self.remat == "full":
+                blk = jax.checkpoint(blk)
+            x, nc = blk(lp, lc, x)
+            return x, nc
+
+        xs = (params["dec_layers"], caches)
+        x, new_caches = jax.lax.scan(body, x, xs)
+        return x, (None if caches is None else new_caches)
+
+    def _dec_embed(self, params, tokens):
+        cfg = self.cfg
+        x = jnp.take(params["tok_embed"], tokens, axis=0)
+        start = 0
+        pos = sinusoidal_positions(
+            jnp.arange(start, start + tokens.shape[1]), cfg.d_model)
+        return x + pos[None].astype(x.dtype)
+
+    def _logits(self, params, x):
+        logits = x @ params["tok_embed"].T
+        if self.vp != self.cfg.vocab_size:
+            mask = jnp.arange(self.vp) < self.cfg.vocab_size
+            logits = jnp.where(mask[None, ...], logits, NEG_INF)
+        return logits
+
+    # ---------------------------------------------------------------- api
+    def loss(self, params, batch):
+        """batch: {"frames": (B,T,d), "tokens": (B,S+1)}"""
+        enc_out = self.encode(params, batch["frames"].astype(self.dtype))
+        tokens = batch["tokens"]
+        x = self._dec_embed(params, tokens[:, :-1])
+        labels = tokens[:, 1:]
+        mask = jnp.ones(labels.shape, jnp.float32)
+        q_pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        x, _ = self._dec_stack(params, x, enc_out, q_pos, None)
+        x = layer_norm(x, params["dec_norm"]["w"], params["dec_norm"]["b"])
+        ce, _ = chunked_softmax_xent(lambda xs: self._logits(params, xs),
+                                     x, labels, mask, self.loss_chunks)
+        return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+    def init_cache(self, batch: int, cache_len: int):
+        cfg, dtype = self.cfg, self.dtype
+        hd, H = cfg.resolved_head_dim, cfg.n_heads
+        one = {
+            "k": jnp.zeros((batch, cache_len, H, hd), dtype),
+            "v": jnp.zeros((batch, cache_len, H, hd), dtype),
+            "pos": -jnp.ones((batch, cache_len), jnp.int32),
+        }
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one)
+
+    def prefill(self, params, tokens, frames, cache_len=None):
+        """Cached prefill: runs the decoder stack writing KV at slots [0:S)."""
+        enc_out = self.encode(params, frames.astype(self.dtype))
+        x = self._dec_embed(params, tokens)
+        B, S = tokens.shape
+        cache_len = max(cache_len or S, S)
+        q_pos = jnp.arange(S, dtype=jnp.int32)
+        caches = self.init_cache(B, cache_len)
+        x_out, caches = self._dec_stack(params, x, enc_out, q_pos, caches)
+        x_out = layer_norm(x_out, params["dec_norm"]["w"], params["dec_norm"]["b"])
+        logits = self._logits(params, x_out[:, -1:, :])[:, 0]
+        return logits, (enc_out, caches)
+
+    def decode_step(self, params, state, token, pos):
+        enc_out, caches = state
+        x = jnp.take(params["tok_embed"], token, axis=0)
+        pos_emb = sinusoidal_positions(jnp.asarray(pos)[None], self.cfg.d_model)
+        x = x + pos_emb[None].astype(x.dtype)
+        q_pos = jnp.asarray(pos, jnp.int32)[None]
+        x, caches = self._dec_stack(params, x, enc_out, q_pos, caches)
+        x = layer_norm(x, params["dec_norm"]["w"], params["dec_norm"]["b"])
+        return self._logits(params, x)[:, 0], (enc_out, caches)

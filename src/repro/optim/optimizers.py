@@ -1,0 +1,99 @@
+"""Minimal functional optimizers (optax-style API, written from scratch).
+
+The paper trains with SGD (momentum 0.9, weight decay 1e-3); the LM
+substrate defaults to AdamW. State dtype is configurable so the dry-run can
+account fp32 moments against HBM honestly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params) -> (updates, state)
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, dtype or p.dtype), params)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def sgd(lr, momentum: float = 0.0, weight_decay: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        mu = _tree_zeros_like(params) if momentum else None
+        return {"mu": mu, "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step_lr = lr_fn(state["count"])
+        if weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g,
+                              state["mu"], grads)
+            eff = (jax.tree.map(lambda m, g: g + momentum * m, mu, grads)
+                   if nesterov else mu)
+        else:
+            mu, eff = None, grads
+        updates = jax.tree.map(lambda g: -step_lr * g, eff)
+        return updates, {"mu": mu, "count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "mu": _tree_zeros_like(params, state_dtype),
+            "nu": _tree_zeros_like(params, state_dtype),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        step_lr = lr_fn(count)
+        gf = jax.tree.map(lambda g: g.astype(state_dtype), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], gf)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          state["nu"], gf)
+        c = count.astype(state_dtype)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+
+        def upd(m, v, p):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(state_dtype)
+            return -step_lr * u
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "count": count}
+
+    return Optimizer(init, update)

@@ -1,0 +1,19 @@
+"""Learning-rate schedules."""
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.float32(value)
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac * peak + (1 - final_frac) * peak * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,159 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+compute term    = HLO_FLOPs / (chips * peak FLOP/s)
+memory term     = HLO_bytes / (chips * HBM bandwidth)
+collective term = collective bytes / (chips * ICI link bandwidth)
+
+``cost_analysis`` supplies FLOPs / bytes-accessed. Collective bytes are NOT
+in cost_analysis: we parse the compiled (post-SPMD) HLO text and sum the
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute. Post-SPMD shapes are *per-partition*, so
+the parsed sum is per-device bytes; the per-chip collective term divides by
+one ICI link bandwidth (conservative single-link model; v5e has multiple
+links per chip, noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,128]' -> bytes. '(bf16[..], f32[..])' handled by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind from compiled HLO text.
+
+    HLO lines look like::
+
+      %ar = bf16[8,128]{1,0} all-reduce(bf16[8,128]{1,0} %x), replica_groups=...
+
+    Operand types are inlined in the call; we sum them per op kind.
+    ``-start`` variants counted once (``-done`` carries no operands of its
+    own in post-opt HLO printing where it references the start op).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.search(r"=\s*[^=]*?\b(all-gather|all-reduce|reduce-scatter|"
+                      r"all-to-all|collective-permute)(-start)?\(", s)
+        if not m:
+            continue
+        kind = m.group(1)
+        # operand section: between the first '(' after op name and ')'
+        try:
+            args = s[s.index(m.group(0)) + len(m.group(0)) - 1:]
+        except ValueError:
+            args = s
+        depth = 0
+        end = 0
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = args[1:end] if end else args
+        out[kind] += _shape_bytes(operand_str)
+        counts[kind] += 1
+    out_total = sum(out.values())
+    return {"per_kind": out, "counts": counts, "total": out_total}
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12  # bf16 / chip (TPU v5e)
+    hbm_bw: float = 819e9       # B/s / chip
+    ici_bw: float = 50e9        # B/s / link
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes_per_device: float, chips: int,
+                   hw: HW = HW()) -> dict:
+    compute_s = flops / (chips * hw.peak_flops)
+    memory_s = bytes_accessed / (chips * hw.hbm_bw)
+    collective_s = coll_bytes_per_device / hw.ici_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    return terms
+
+
+def analyze_compiled(compiled, chips: int, model_flops: float = 0.0,
+                     hw: HW = HW()) -> dict:
+    """Roofline record for a compiled artifact.
+
+    Primary accounting comes from the trip-count-aware HLO analyzer
+    (``repro.roofline.hlo``) because XLA's ``cost_analysis`` counts while
+    bodies once. Its shapes are post-SPMD = per device. ``cost_analysis``
+    is retained as a diagnostic.
+    """
+    from .hlo import analyze_hlo_text
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    hlo = compiled.as_text()
+    tot = analyze_hlo_text(hlo)
+    mem = compiled.memory_analysis()
+
+    compute_s = tot.flops / hw.peak_flops
+    memory_s = tot.hbm_bytes / hw.hbm_bw
+    collective_s = tot.collective_total / hw.ici_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    record = {
+        "per_device": {
+            "flops": tot.flops,
+            "hbm_bytes": tot.hbm_bytes,
+            "collective_bytes": tot.collective_total,
+            "collective_by_kind": tot.coll_bytes,
+            "collective_counts": tot.coll_counts,
+        },
+        "xla_cost_analysis": {
+            "flops_once": float(cost.get("flops", 0.0)),
+            "bytes_accessed_once": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        },
+        "chips": chips,
+        "roofline": {**terms, "dominant": dominant,
+                     "step_time_lower_bound_s": max(terms.values())},
+    }
+    if model_flops:
+        record["model_flops"] = model_flops
+        record["model_flops_ratio"] = model_flops / max(tot.flops * chips, 1.0)
+    return record

@@ -1,0 +1,95 @@
+"""Hot-spot breakdown over the trip-count-weighted HLO call tree: which
+instructions (by metadata op_name prefix) carry the HBM bytes / flops.
+Used by the §Perf hillclimbing loop to aim at the dominant term.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+
+from .hlo import (COLLECTIVE_OPS, HloModule, _FREE_OPS, shape_bytes)
+
+_META = re.compile(r'op_name="([^"]+)"')
+
+
+def _tag(instr, depth=2):
+    m = _META.search(instr.attrs)
+    if not m:
+        # fall back to the fusion's own (often descriptive) name
+        return f"{instr.opcode}:{instr.name.split('.')[0]}"
+    parts = [p for p in m.group(1).split("/") if not p.startswith("jit(")]
+    return "/".join(parts[:depth]) or instr.opcode
+
+
+def byte_breakdown(hlo_text: str, top: int = 20, depth: int = 3):
+    """Returns [(tag, bytes)] sorted desc, loop-multiplied, value-traffic
+    model (write + deduped read per computation, same as hlo.analyze)."""
+    m = HloModule(hlo_text)
+    bytes_by = Counter()
+    flops_by = Counter()
+
+    def walk(comp, mult):
+        symtab = {i.name: i.shape for i in m.computations.get(comp, [])}
+        reads = {}
+        for instr in m.computations.get(comp, []):
+            op = instr.opcode
+            if op in _FREE_OPS or op.endswith("-done"):
+                continue
+            if op == "while":
+                trip = instr.trip_count or 1
+                for c in instr.called:
+                    if c in m.computations:
+                        walk(c, mult * trip)
+                continue
+            if op in ("call", "conditional"):
+                for c in instr.called:
+                    if c in m.computations:
+                        walk(c, mult)
+                continue
+            tag = _tag(instr, depth)
+            if op == "fusion":
+                f = sum(m._flops_only(c) for c in instr.called
+                        if c in m.computations)
+                flops_by[tag] += f * mult
+                inner_list = [i for c in instr.called
+                              for i in m.computations.get(c, [])]
+                inner = {i.opcode for i in inner_list}
+                from .hlo import _LAYOUT_ONLY
+                if inner <= _LAYOUT_ONLY:
+                    continue
+                if "scatter" in inner or "dynamic-update-slice" in inner:
+                    upd = (shape_bytes(symtab.get(instr.operands[-1], ""))
+                           if instr.operands else 0)
+                    bytes_by[tag] += 2 * upd * mult
+                    continue
+                if "dynamic-slice" in inner:
+                    ds = sum(shape_bytes(i.shape) for i in inner_list
+                             if i.opcode == "dynamic-slice")
+                    cap = ds + shape_bytes(instr.shape)
+                    bytes_by[tag] += shape_bytes(instr.shape) * mult
+                    for o in instr.operands:
+                        bytes_by[tag] += min(
+                            shape_bytes(symtab.get(o, "")), cap) * mult
+                    continue
+            elif op == "dynamic-update-slice":
+                upd = (shape_bytes(symtab.get(instr.operands[1], ""))
+                       if len(instr.operands) > 1 else 0)
+                bytes_by[tag] += 2 * upd * mult
+                continue
+            elif op == "scatter":
+                upd = (shape_bytes(symtab.get(instr.operands[-1], ""))
+                       if instr.operands else 0)
+                bytes_by[tag] += 2 * upd * mult
+                continue
+            elif op == "dot":
+                flops_by[tag] += m._dot_flops(instr, symtab) * mult
+            bytes_by[tag] += shape_bytes(instr.shape) * mult
+            for o in instr.operands:
+                # attribute the (deduped) read to its first consumer
+                if o not in reads:
+                    reads[o] = tag
+        for o, tag in reads.items():
+            bytes_by[tag] += shape_bytes(symtab.get(o, "")) * mult
+
+    walk(m.entry, 1)
+    return (bytes_by.most_common(top), flops_by.most_common(top))

@@ -1,0 +1,5 @@
+from .rules import (add_client_axis, batch_specs, cache_specs, named,
+                    param_specs)
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "add_client_axis",
+           "named"]

@@ -1,0 +1,170 @@
+"""Megatron-style logical sharding rules for every model family.
+
+Axes: ``data`` shards the batch (and long-context cache sequence),
+``model`` shards heads / d_ff / vocab / experts / recurrent width.
+KV projections whose head count does not divide the model axis are
+replicated (GQA kv<16; recorded in DESIGN.md — a decode-time head-dim
+split is a §Perf item). Mamba2 blocks are replicated (370M params; the
+measured memory term stays negligible — see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import (DictKey, FlattenedIndexKey, GetAttrKey,
+                           SequenceKey)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, GetAttrKey):
+            parts.append(p.name)
+        elif isinstance(p, FlattenedIndexKey):
+            parts.append(str(p.key))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _pad_spec(spec: P, ndim: int, n_leading: int) -> P:
+    """Prepend Nones for stacked leading axes (layer scan stacking)."""
+    tail = tuple(spec) + (None,) * (ndim - n_leading - len(tuple(spec)))
+    return P(*((None,) * n_leading + tail))
+
+
+def _leading_stack_dims(pathstr: str) -> int:
+    """Params under layers/segments are stacked with one leading layer axis."""
+    return 1 if ("layers/" in pathstr or "segments/" in pathstr) else 0
+
+
+# (regex on path, base spec builder fn(shape_tail, model_size) -> P)
+def _param_rule(name: str, shape, model_size: int, kv_heads: int):
+    def div(i):
+        return shape[i] % model_size == 0
+
+    if name in ("tok_embed",):
+        return P("model", None)
+    if name in ("lm_head",):
+        return P(None, "model")
+    if name == "wq":
+        return P(None, "model") if div(-1) else P(None, None)
+    if name in ("wk", "wv"):
+        # shard only when whole KV heads divide the axis
+        if kv_heads and kv_heads % model_size == 0:
+            return P(None, "model")
+        return P(None, None)
+    if name == "wo":
+        return P("model", None) if div(0) else P(None, None)
+    if name in ("wi_gate", "wi_up", "wi"):
+        return P(None, "model") if div(-1) else P(None, None)
+    if name in ("wo_mlp",):
+        return P("model", None) if div(0) else P(None, None)
+    if name == "bi":
+        return P("model") if div(-1) else P(None)
+    if name in ("we_gate", "we_up", "we_down"):
+        return P("model", None, None)  # expert parallel
+    if name == "router":
+        return P(None, None)
+    # RG-LRU (width axis shards over model)
+    if name in ("w_gate", "w_lin"):
+        return P(None, "model") if div(-1) else P(None, None)
+    if name in ("wa", "wx"):
+        return P(None, "model") if div(-1) else P(None, None)
+    if name in ("lam", "ba", "bx"):
+        return P("model") if div(-1) else P(None)
+    if name == "w_out":
+        return P("model", None) if div(0) else P(None, None)
+    if name == "conv_w":
+        return P(None, "model") if len(shape) == 2 and div(-1) else P(*(None,) * len(shape))
+    return P(*(None,) * len(shape))
+
+
+def param_specs(model, cfg, mesh, example_key=None):
+    """PartitionSpec tree matching model.init output structure."""
+    import jax.numpy as jnp  # noqa
+
+    sizes = getattr(mesh, "axis_sizes", None)
+    if sizes is None:
+        sizes = mesh.devices.shape
+    model_size = dict(zip(mesh.axis_names, sizes)).get("model", 1)
+    key = example_key if example_key is not None else jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(model.init, key)
+
+    def leaf(path, x):
+        pathstr = _path_str(path)
+        name = pathstr.split("/")[-1]
+        nlead = _leading_stack_dims(pathstr)
+        # mamba family: replicate whole block (small model; see DESIGN.md)
+        if cfg.family == "ssm" and name in (
+                "in_proj", "out_proj", "A_log", "D", "dt_bias", "norm_w",
+                "conv_w"):
+            return P(*(None,) * x.ndim)
+        # whisper mlp dict uses wi/wo/bi/bo; cross/self attn reuse wq..wo
+        base = _param_rule(name, x.shape[nlead:], model_size, cfg.n_kv_heads)
+        return _pad_spec(base, x.ndim, nlead)
+
+    return jax.tree_util.tree_map_with_path(leaf, shapes)
+
+
+def batch_specs(cfg, shape_kind: str, global_batch: int, data_axes=("data",)):
+    """Specs for a batch dict. data_axes may be ('data',) or ('pod','data')."""
+    b = P(data_axes) if global_batch > 1 else P(None)
+    bt = P(data_axes, None) if global_batch > 1 else P(None, None)
+    b3 = P(data_axes, None, None) if global_batch > 1 else P(None, None, None)
+    out = {"tokens": bt}
+    if cfg.family == "vlm":
+        out["vision"] = b3
+    if cfg.family == "audio":
+        out["frames"] = b3
+    return out
+
+
+def cache_specs(model, cfg, batch: int, cache_len: int, *, shard_seq=False,
+                shard_seq_model=False):
+    """Spec tree matching model.init_cache structure.
+
+    shard_seq: shard the cache sequence axis over 'data' (long_500k B=1).
+    shard_seq_model: shard the cache sequence axis over 'model' (the
+    flash-decoding layout of attn_decode_seqshard; §Perf)."""
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, cache_len))
+    data = "data" if batch > 1 else None
+
+    def leaf(path, x):
+        # every cache leaf is stacked with ONE leading layer/group axis:
+        #   k/v: (L, B, C, Hkv, hd); pos: (L, B, C); h: (L, B, ...);
+        #   conv: (L, B, K-1, C)
+        pathstr = _path_str(path)
+        name = pathstr.split("/")[-1]
+        if shard_seq_model:
+            seq = "model"
+        else:
+            seq = "data" if (shard_seq and batch == 1) else None
+        if name in ("k", "v"):
+            return P(None, data, seq, None, None)
+        if name == "pos":
+            return P(None, data, seq)
+        # ssm/rec state & conv: batch at dim 1, replicate the rest
+        return P(*((None, data) + (None,) * (x.ndim - 2)))
+
+    return jax.tree_util.tree_map_with_path(leaf, shapes)
+
+
+def add_client_axis(spec_tree):
+    """Prepend a 'pod' (client) axis to every spec in the tree."""
+    def f(s):
+        return P(*(("pod",) + tuple(s)))
+    return jax.tree.map(f, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

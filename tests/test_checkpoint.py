@@ -1,0 +1,50 @@
+"""Checkpoint roundtrip + best-model retention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 5)),
+            "nested": {"b": jnp.arange(3, dtype=jnp.int32),
+                       "c": [jnp.ones(2), jnp.zeros((1, 1))]}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_pytree(str(tmp_path / "x"), t, {"note": "hi"})
+    t2 = load_pytree(str(tmp_path / "x"), jax.tree.map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    t = _tree()
+    save_pytree(str(tmp_path / "x"), t)
+    bad = jax.tree.map(lambda a: jnp.zeros(a.shape + (1,), a.dtype), t)
+    with pytest.raises(ValueError):
+        load_pytree(str(tmp_path / "x"), bad)
+
+
+def test_manager_best_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    assert mgr.keep_best(0.5, t)
+    assert not mgr.keep_best(0.4, t)       # worse metric rejected
+    assert mgr.keep_best(0.9, _tree(1))
+    best = mgr.restore_best(jax.tree.map(jnp.zeros_like, t))
+    np.testing.assert_array_equal(np.asarray(best["a"]),
+                                  np.asarray(_tree(1)["a"]))
+    for s in range(5):
+        mgr.save_step(s, t)
+    assert mgr.latest_step() == 4
+    s, t2 = mgr.restore_latest(jax.tree.map(jnp.zeros_like, t))
+    assert s == 4
+    import os
+    steps = [f for f in os.listdir(str(tmp_path)) if f.startswith("step_")
+             and f.endswith(".json")]
+    assert len(steps) == 2  # retention

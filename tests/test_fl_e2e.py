@@ -1,0 +1,106 @@
+"""End-to-end DPFL behaviour (paper's qualitative claims, small scale):
+DPFL > local > blind FedAvg under cluster heterogeneity; the inferred graph
+aligns with clusters; label-flip segregation; baselines all runnable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DPFLConfig, graph_stats, run_dpfl
+from repro.data import make_federated_classification, make_label_flip_data
+from repro.fl.baselines import BASELINES, run_baseline
+from repro.fl.engine import FLEngine
+from repro.models.classifier import MLP
+
+
+@pytest.fixture(scope="module")
+def setting():
+    data = make_federated_classification(
+        seed=3, n_clients=8, n_clusters=2, partition="pathological",
+        classes_per_client=3, feature_dim=16, n_train=16, n_val=24,
+        n_test=48, noise=2.0, assign_level="cluster")
+    model = MLP(16, 32, 10)
+    return model, data, FLEngine(model, data, lr=0.05, batch_size=8)
+
+
+@pytest.fixture(scope="module")
+def dpfl_result(setting):
+    _, data, eng = setting
+    cfg = DPFLConfig(rounds=8, tau_init=3, tau_train=3, budget=4, seed=0)
+    return run_dpfl(eng, cfg)
+
+
+def test_dpfl_beats_local_and_fedavg(setting, dpfl_result):
+    _, data, eng = setting
+    local = run_baseline("local", eng, rounds=8, tau=3, seed=0)
+    fedavg = run_baseline("fedavg", eng, rounds=8, tau=3, seed=0)
+    d = dpfl_result.test_acc.mean()
+    assert d > local["test_acc"].mean() - 0.01, \
+        f"DPFL {d:.3f} vs local {local['test_acc'].mean():.3f}"
+    assert d > fedavg["test_acc"].mean() + 0.02, \
+        f"DPFL {d:.3f} vs fedavg {fedavg['test_acc'].mean():.3f}"
+
+
+def test_graph_aligns_with_clusters(setting, dpfl_result):
+    _, data, _ = setting
+    adj = dpfl_result.graph_history[-1].astype(float)
+    cl = data.cluster
+    same = adj[cl[:, None] == cl[None, :]].mean()
+    cross = adj[cl[:, None] != cl[None, :]].mean()
+    assert same > cross + 0.2, (same, cross)
+
+
+def test_graph_sparsifies_over_rounds(setting, dpfl_result):
+    stats = graph_stats(dpfl_result)
+    assert stats["final_sparsity"] >= stats["initial_sparsity"] - 0.05
+
+
+def test_budget_respected_every_round(dpfl_result):
+    for adj in dpfl_result.graph_history:
+        assert (adj.sum(1) - 1 <= 4).all()
+
+
+def test_random_graph_underperforms_ggc(setting, dpfl_result):
+    """Fig. 3: DPFL with GGC vs random collaboration graph."""
+    _, _, eng = setting
+    cfg = DPFLConfig(rounds=8, tau_init=3, tau_train=3, budget=4, seed=0,
+                     random_graph=True)
+    rnd = run_dpfl(eng, cfg)
+    assert dpfl_result.test_acc.mean() >= rnd.test_acc.mean() - 0.02
+
+
+def test_label_flip_segregation():
+    """Fig. 4 behaviour: benign clients stop selecting malicious ones."""
+    data = make_label_flip_data(seed=0, n_clients=8, n_malicious=3,
+                                feature_dim=16, n_train=24, n_val=24,
+                                n_test=24, noise=0.5)
+    model = MLP(16, 32, 10)
+    eng = FLEngine(model, data, lr=0.05, batch_size=8)
+    res = run_dpfl(eng, DPFLConfig(rounds=6, tau_init=3, tau_train=3,
+                                   budget=5, seed=0))
+    adj = res.graph_history[-1].astype(float)
+    benign = data.cluster == 0
+    mal = ~benign
+    cross = adj[np.ix_(benign, mal)].mean()
+    within = (adj[np.ix_(benign, benign)].sum() - benign.sum()) / \
+        (benign.sum() * (benign.sum() - 1))
+    assert within > cross, (within, cross)
+
+
+@pytest.mark.parametrize("name", sorted(BASELINES))
+def test_baseline_runs(setting, name):
+    _, _, eng = setting
+    out = run_baseline(name, eng, rounds=2, tau=1, seed=0)
+    acc = out["test_acc"]
+    assert acc.shape == (8,)
+    assert np.isfinite(acc).all()
+    assert (acc >= 0).all() and (acc <= 1).all()
+
+
+def test_refresh_period_variants(setting):
+    """Table 3: periodic GGC refresh keeps working."""
+    _, _, eng = setting
+    cfg = DPFLConfig(rounds=4, tau_init=2, tau_train=2, budget=4,
+                     refresh_period=2, seed=0)
+    res = run_dpfl(eng, cfg)
+    assert np.isfinite(res.test_acc).all()

@@ -1,0 +1,133 @@
+"""DPFL graph construction: Theorem 1, budget/constraint invariants,
+mixing-matrix properties (property-based via hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import (all_clients_graph, make_bggc, make_ggc,
+                              make_ggc_naive, mix_flat, mix_pytree,
+                              mixing_matrix)
+
+
+def _toy_reward(target):
+    def reward(fw, k):
+        return -jnp.sum((fw - target) ** 2) - 0.05 * k * jnp.sum(fw ** 2)
+    return reward
+
+
+@pytest.fixture(scope="module")
+def toy():
+    key = jax.random.PRNGKey(42)
+    N, P = 7, 24
+    flat_w = jax.random.normal(key, (N, P))
+    p = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (N,))) + 0.1
+    p = p / p.sum()
+    target = jax.random.normal(jax.random.PRNGKey(2), (P,))
+    return N, flat_w, p, _toy_reward(target)
+
+
+@pytest.mark.parametrize("budget", [1, 3, 6])
+def test_theorem1_ggc_equals_naive_and_bggc(toy, budget):
+    """Theorem 1: seeded GGC == literal Alg.2 recompute == batched BGGC."""
+    N, flat_w, p, reward = toy
+    g = make_ggc(reward, budget)
+    gn = make_ggc_naive(reward, budget)
+    gb = make_bggc(reward, budget)
+    for k in range(N):
+        key = jax.random.fold_in(jax.random.PRNGKey(7), k)
+        cand = jnp.ones(N, bool)
+        a = np.asarray(g(key, jnp.int32(k), cand, flat_w, p))
+        b = np.asarray(gn(key, jnp.int32(k), cand, flat_w, p))
+        c = np.asarray(gb(key, jnp.int32(k), cand, flat_w, p))
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+
+
+@pytest.mark.parametrize("budget", [1, 2, 5])
+def test_budget_and_self_membership(toy, budget):
+    N, flat_w, p, reward = toy
+    g = make_ggc(reward, budget)
+    for k in range(N):
+        key = jax.random.fold_in(jax.random.PRNGKey(3), k)
+        mask = np.asarray(g(key, jnp.int32(k), jnp.ones(N, bool), flat_w, p))
+        assert mask[k], "client always collaborates with itself"
+        assert mask.sum() - 1 <= budget, "|C_k| <= B_c violated"
+
+
+def test_candidates_respected(toy):
+    """GGC never selects outside Omega_k."""
+    N, flat_w, p, reward = toy
+    g = make_ggc(reward, N)
+    cand = jnp.zeros(N, bool).at[jnp.array([1, 3])].set(True)
+    mask = np.asarray(g(jax.random.PRNGKey(0), jnp.int32(0), cand, flat_w, p))
+    outside = set(np.flatnonzero(mask)) - {0, 1, 3}
+    assert not outside
+
+
+def test_all_clients_graph_shapes(toy):
+    N, flat_w, p, reward = toy
+    adj = all_clients_graph(jax.random.PRNGKey(5), flat_w, p,
+                            jnp.ones((N, N), bool), reward, budget=3)
+    adj = np.asarray(adj)
+    assert adj.shape == (N, N)
+    assert adj.diagonal().all()
+    assert (adj.sum(1) - 1 <= 3).all()
+
+
+def test_graph_can_be_asymmetric(toy):
+    """The paper's point: directed edges — A can pick B without B picking A."""
+    N, flat_w, p, reward = toy
+    adj = np.asarray(all_clients_graph(
+        jax.random.PRNGKey(11), flat_w, p, jnp.ones((N, N), bool), reward,
+        budget=2))
+    off = adj.copy()
+    np.fill_diagonal(off, False)
+    assert (off != off.T).any(), "expected at least one directed edge"
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 12), seed=st.integers(0, 10_000))
+def test_mixing_matrix_row_stochastic(n, seed):
+    rng = np.random.default_rng(seed)
+    adj = rng.random((n, n)) < 0.4
+    p = rng.random(n) + 0.05
+    p = p / p.sum()
+    A = np.asarray(mixing_matrix(jnp.asarray(adj), jnp.asarray(p)))
+    np.testing.assert_allclose(A.sum(1), 1.0, atol=1e-5)
+    assert (A >= 0).all()
+    assert (A.diagonal() > 0).all(), "self weight always positive"
+    # zero where no edge (and not diagonal)
+    off = ~adj & ~np.eye(n, dtype=bool)
+    assert np.allclose(A[off], 0.0)
+
+
+def test_mix_pytree_matches_flat(toy):
+    N, flat_w, p, _ = toy
+    adj = jnp.asarray(np.random.default_rng(0).random((N, N)) < 0.5)
+    A = mixing_matrix(adj, p)
+    tree = {"a": flat_w[:, :10], "b": {"c": flat_w[:, 10:]}}
+    mixed = mix_pytree(A, tree)
+    flat_mixed = jnp.concatenate([mixed["a"], mixed["b"]["c"]], axis=1)
+    np.testing.assert_allclose(np.asarray(flat_mixed),
+                               np.asarray(mix_flat(A, flat_w)), atol=1e-5)
+
+
+def test_proposition1_unconstrained_at_least_restricted(toy):
+    """Prop. 1 (sanity form): the best reward reachable with budget B is
+    monotone in B for the same seed-stream decisions' search space: the
+    unconstrained GGC solution's reward >= forced-empty-set reward."""
+    N, flat_w, p, reward = toy
+    g = make_ggc(reward, N)
+    k = 2
+    key = jax.random.PRNGKey(9)
+    mask = g(key, jnp.int32(k), jnp.ones(N, bool), flat_w, p)
+    m = mask.astype(jnp.float32)
+    avg = jnp.einsum("n,np->p", m * p, flat_w) / jnp.sum(m * p)
+    solo = flat_w[k]
+    # Alg. guarantee: returned set no worse than the empty set w.p. 1 holds
+    # in expectation; here we assert the selected-average reward is finite
+    # and defined, and that local-only is in the feasible set.
+    assert np.isfinite(float(reward(avg, k)))
+    assert np.isfinite(float(reward(solo, k)))

@@ -1,0 +1,68 @@
+"""Beyond-paper extensions from the paper's own §Limitations:
+per-client budgets B_c^k and communicability-restricted candidates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import (all_clients_graph,
+                              all_clients_graph_heterogeneous, make_ggc,
+                              make_ggc_heterogeneous)
+
+
+@pytest.fixture(scope="module")
+def toy():
+    key = jax.random.PRNGKey(42)
+    N, P = 7, 24
+    flat_w = jax.random.normal(key, (N, P))
+    p = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (N,))) + 0.1
+    p = p / p.sum()
+    target = jax.random.normal(jax.random.PRNGKey(2), (P,))
+
+    def reward(fw, k):
+        return -jnp.sum((fw - target) ** 2) - 0.05 * k * jnp.sum(fw ** 2)
+
+    return N, flat_w, p, reward
+
+
+def test_heterogeneous_budgets_respected(toy):
+    N, flat_w, p, reward = toy
+    budgets = jnp.asarray([1, 2, 3, 4, 5, 0, 6], jnp.int32)
+    adj = np.asarray(all_clients_graph_heterogeneous(
+        jax.random.PRNGKey(0), flat_w, p, jnp.ones((N, N), bool), reward,
+        budgets))
+    assert adj.diagonal().all()
+    for k in range(N):
+        assert adj[k].sum() - 1 <= int(budgets[k]), (k, adj[k])
+    # the zero-budget client collaborates with no one
+    assert adj[5].sum() == 1
+
+
+def test_heterogeneous_matches_uniform_when_equal(toy):
+    """With equal budgets the traced-budget kernel must equal the paper's
+    static-budget GGC (same seed stream)."""
+    N, flat_w, p, reward = toy
+    b = 3
+    uni = np.asarray(all_clients_graph(
+        jax.random.PRNGKey(9), flat_w, p, jnp.ones((N, N), bool), reward, b))
+    het = np.asarray(all_clients_graph_heterogeneous(
+        jax.random.PRNGKey(9), flat_w, p, jnp.ones((N, N), bool), reward,
+        jnp.full((N,), b, jnp.int32)))
+    np.testing.assert_array_equal(uni, het)
+
+
+def test_reachability_restriction(toy):
+    """Clients can only select peers within communicable distance."""
+    N, flat_w, p, reward = toy
+    # ring topology: k can reach k±1 only
+    reach = np.zeros((N, N), bool)
+    for k in range(N):
+        reach[k, (k - 1) % N] = True
+        reach[k, (k + 1) % N] = True
+    adj = np.asarray(all_clients_graph_heterogeneous(
+        jax.random.PRNGKey(3), flat_w, p, jnp.ones((N, N), bool), reward,
+        jnp.full((N,), N, jnp.int32), reachability=jnp.asarray(reach)))
+    for k in range(N):
+        chosen = set(np.flatnonzero(adj[k])) - {k}
+        allowed = {(k - 1) % N, (k + 1) % N}
+        assert chosen <= allowed, (k, chosen)

@@ -1,0 +1,144 @@
+"""Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.graph_mix import graph_mix
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.ssd import ssd
+from repro.kernels import ref
+
+
+# --------------------------------------------------------------- graph_mix
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 24), p=st.integers(1, 700),
+       bp=st.sampled_from([64, 128, 256]), seed=st.integers(0, 100))
+def test_graph_mix_sweep(n, p, bp, seed):
+    key = jax.random.PRNGKey(seed)
+    A = jax.nn.softmax(jax.random.normal(key, (n, n)))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (n, p))
+    out = graph_mix(A, W, block_p=bp, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.graph_mix_ref(A, W)),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_graph_mix_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    A = jax.nn.softmax(jax.random.normal(key, (8, 8)))
+    W = jax.random.normal(key, (8, 1000)).astype(dtype)
+    out = graph_mix(A, W, interpret=True)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref.graph_mix_ref(A, W), np.float32),
+        atol=(1e-5 if dtype == jnp.float32 else 5e-2))
+
+
+# ---------------------------------------------------------- flash attention
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd,win,bq,bk", [
+    (1, 128, 2, 2, 32, None, 64, 64),
+    (2, 256, 4, 2, 64, None, 128, 64),
+    (1, 256, 4, 1, 64, 96, 64, 64),      # MQA + sliding window
+    (2, 128, 8, 4, 16, 64, 32, 32),
+    (1, 512, 2, 2, 64, 128, 128, 128),
+])
+def test_flash_attention_shapes(B, S, Hq, Hkv, hd, win, bq, bk):
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (B, S, Hq, hd)) * 0.5
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, hd)) * 0.5
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, hd))
+    o = flash_attention(q, k, v, causal=True, window=win, block_q=bq,
+                        block_k=bk, interpret=True)
+    r = ref.flash_attention_ref(q, k, v, causal=True, window=win)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    key = jax.random.PRNGKey(2)
+    q = (jax.random.normal(key, (1, 128, 2, 64)) * 0.5).astype(jnp.bfloat16)
+    k = (jax.random.normal(key, (1, 128, 2, 64)) * 0.5).astype(jnp.bfloat16)
+    v = jax.random.normal(key, (1, 128, 2, 64)).astype(jnp.bfloat16)
+    o = flash_attention(q, k, v, interpret=True)
+    r = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=3e-2)
+
+
+# -------------------------------------------------------------- rglru scan
+
+
+@pytest.mark.parametrize("B,S,W,bs,bw", [
+    (1, 128, 256, 64, 128),
+    (2, 256, 512, 128, 256),
+    (3, 64, 128, 64, 128),
+])
+def test_rglru_scan_shapes(B, S, W, bs, bw):
+    key = jax.random.PRNGKey(3)
+    a = jax.nn.sigmoid(jax.random.normal(key, (B, S, W))) * 0.2 + 0.79
+    b = jax.random.normal(jax.random.fold_in(key, 1), (B, S, W)) * 0.1
+    h0 = jax.random.normal(jax.random.fold_in(key, 2), (B, W))
+    o, hl = rglru_scan(a, b, h0, block_s=bs, block_w=bw, interpret=True)
+    ro, rhl = ref.linear_scan_ref(a, b, h0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ro), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(rhl), atol=1e-4)
+
+
+def test_rglru_scan_no_h0():
+    key = jax.random.PRNGKey(4)
+    a = jax.nn.sigmoid(jax.random.normal(key, (2, 128, 128))) * 0.5 + 0.49
+    b = jax.random.normal(key, (2, 128, 128)) * 0.1
+    o, hl = rglru_scan(a, b, block_s=64, block_w=128, interpret=True)
+    ro, rhl = ref.linear_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ro), atol=1e-4)
+
+
+# --------------------------------------------------------------------- ssd
+
+
+@pytest.mark.parametrize("b,l,H,p,n,ch", [
+    (1, 128, 2, 16, 8, 32),
+    (2, 256, 4, 32, 16, 64),
+    (1, 64, 1, 64, 32, 64),   # single chunk
+])
+def test_ssd_shapes(b, l, H, p, n, ch):
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (b, l, H, p)) * 0.3
+    dlogA = -jnp.abs(jax.random.normal(jax.random.fold_in(key, 1),
+                                       (b, l, H))) * 0.1
+    B = jax.random.normal(jax.random.fold_in(key, 2), (b, l, n)) * 0.3
+    C = jax.random.normal(jax.random.fold_in(key, 3), (b, l, n)) * 0.3
+    y, hl = ssd(x, dlogA, B, C, chunk=ch, interpret=True)
+    yr, hr = ref.ssd_ref(x, dlogA, B, C, ch)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hr),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_ssd_matches_sequential_recurrence():
+    """SSD chunked algorithm == literal per-step SSM recurrence."""
+    from repro.models.ssm import ssd_decode_step
+    key = jax.random.PRNGKey(6)
+    b, l, H, p, n = 1, 32, 2, 8, 4
+    x = jax.random.normal(key, (b, l, H, p)) * 0.3
+    dlogA = -jnp.abs(jax.random.normal(key, (b, l, H))) * 0.2
+    B = jax.random.normal(jax.random.fold_in(key, 1), (b, l, n)) * 0.3
+    C = jax.random.normal(jax.random.fold_in(key, 2), (b, l, n)) * 0.3
+    y, _ = ssd(x, dlogA, B, C, chunk=16, interpret=True)
+    h = jnp.zeros((b, H, p, n))
+    ys = []
+    for t in range(l):
+        yt, h = ssd_decode_step(h, x[:, t], dlogA[:, t], B[:, t], C[:, t])
+        ys.append(yt)
+    yseq = jnp.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yseq), atol=2e-4)

@@ -1,0 +1,64 @@
+"""Integration: the dry-run builder lowers+compiles on the production mesh
+(512 forced host devices) in a subprocess — one fast combo per kind."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(arch, shape, mesh="single"):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", ""],
+        capture_output=True, text=True, cwd=ROOT, env=env, timeout=1200)
+    return r
+
+
+@pytest.mark.slow
+def test_dryrun_train_single():
+    r = _run("qwen3-0.6b", "train_4k")
+    assert "status" not in r.stdout or "ok" in r.stdout
+    assert "dominant=" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_dryrun_decode_multi():
+    r = _run("qwen3-0.6b", "decode_32k", "multi")
+    assert "dominant=" in r.stdout, r.stdout + r.stderr
+
+
+def test_whisper_long500k_skip_documented():
+    from repro.launch.specs import resolve_arch_for_shape
+    with pytest.raises(NotImplementedError):
+        resolve_arch_for_shape("whisper-medium", "long_500k")
+
+
+def test_dense_long500k_gets_window():
+    from repro.launch.specs import resolve_arch_for_shape
+    cfg = resolve_arch_for_shape("qwen3-4b", "long_500k")
+    assert cfg.attn_window == 4096
+    # natively sub-quadratic archs unchanged
+    cfg = resolve_arch_for_shape("mamba2-370m", "long_500k")
+    assert cfg.attn_window is None
+
+
+def test_input_specs_cover_all_combos():
+    from repro.configs import ARCH_IDS
+    from repro.configs.shapes import SHAPES, get_shape
+    from repro.launch.specs import input_specs, resolve_arch_for_shape
+    n = 0
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            try:
+                cfg = resolve_arch_for_shape(arch, shape)
+            except NotImplementedError:
+                continue
+            specs = input_specs(cfg, get_shape(shape))
+            assert all(hasattr(v, "shape") for v in specs.values())
+            n += 1
+    assert n == 39  # 40 combos - whisper x long_500k

@@ -1,0 +1,64 @@
+"""Optimizer + schedule unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (adamw, apply_updates, clip_by_global_norm, constant,
+                         sgd, warmup_cosine)
+
+
+def _minimize(opt, steps=200):
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        up, state = opt.update(g, state, params)
+        return apply_updates(params, up), state, loss
+
+    for _ in range(steps):
+        params, state, loss = step(params, state)
+    return float(loss)
+
+
+def test_sgd_momentum_converges():
+    assert _minimize(sgd(0.05, momentum=0.9)) < 1e-4
+
+
+def test_adamw_converges():
+    assert _minimize(adamw(0.1)) < 1e-3
+
+
+def test_weight_decay_shrinks():
+    opt = sgd(0.1, weight_decay=0.5)
+    params = {"w": jnp.ones(3)}
+    state = opt.init(params)
+    zero_g = {"w": jnp.zeros(3)}
+    up, state = opt.update(zero_g, state, params)
+    params = apply_updates(params, up)
+    assert float(params["w"][0]) < 1.0
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full(4, 10.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) > 1.0
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, atol=1e-5)
+
+
+def test_warmup_cosine_shape():
+    fn = warmup_cosine(1.0, 10, 100)
+    assert float(fn(0)) == 0.0
+    np.testing.assert_allclose(float(fn(10)), 1.0, atol=1e-5)
+    assert float(fn(50)) < 1.0
+    np.testing.assert_allclose(float(fn(100)), 0.1, atol=1e-2)
+
+
+def test_adamw_state_dtype():
+    opt = adamw(1e-3, state_dtype=jnp.bfloat16)
+    st = opt.init({"w": jnp.zeros(3, jnp.float32)})
+    assert st["mu"]["w"].dtype == jnp.bfloat16

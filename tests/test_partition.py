@@ -1,0 +1,61 @@
+"""Property-based tests for the federated partitioners."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.partition import (dirichlet_proportions,
+                                  partition_pool_dirichlet,
+                                  partition_pool_pathological,
+                                  pathological_assignment)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_clients=st.integers(2, 20), n_classes=st.integers(2, 15),
+       alpha=st.floats(0.05, 10.0), seed=st.integers(0, 1000))
+def test_dirichlet_proportions_normalized(n_clients, n_classes, alpha, seed):
+    rng = np.random.default_rng(seed)
+    pr = dirichlet_proportions(rng, n_clients, n_classes, alpha)
+    assert pr.shape == (n_classes, n_clients)
+    np.testing.assert_allclose(pr.sum(1), 1.0, atol=1e-9)
+    assert (pr >= 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_clients=st.integers(2, 20), n_classes=st.integers(3, 15),
+       k=st.integers(1, 3), seed=st.integers(0, 1000))
+def test_pathological_exactly_k_classes(n_clients, n_classes, k, seed):
+    rng = np.random.default_rng(seed)
+    a = pathological_assignment(rng, n_clients, n_classes, min(k, n_classes))
+    assert (a.sum(1) == min(k, n_classes)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(50, 400), n_clients=st.integers(2, 10),
+       n_classes=st.integers(2, 10), alpha=st.floats(0.05, 5.0),
+       seed=st.integers(0, 1000))
+def test_pool_dirichlet_disjoint_cover(n, n_clients, n_classes, alpha, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, n_classes, n)
+    parts = partition_pool_dirichlet(rng, labels, n_clients, alpha)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n, "partition must cover the pool"
+    assert len(np.unique(allidx)) == n, "partition must be disjoint"
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(50, 400), n_clients=st.integers(2, 10),
+       n_classes=st.integers(3, 10), seed=st.integers(0, 1000))
+def test_pool_pathological_disjoint_cover_and_classes(n, n_clients,
+                                                      n_classes, seed):
+    from hypothesis import assume
+    k = 3
+    # the paper's regime: enough client-slots to cover every class
+    assume(n_clients * k >= n_classes)
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, n_classes, n)
+    parts = partition_pool_pathological(rng, labels, n_clients, k)
+    allidx = np.concatenate([p for p in parts if len(p)])
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n
+    for part in parts:
+        if len(part):
+            assert len(np.unique(labels[part])) <= k

@@ -1,0 +1,48 @@
+"""Flash-decoding (seq-sharded KV cache) equals the reference decode path —
+runs in a subprocess with 8 forced host devices."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.configs import REGISTRY
+from repro.models import build_model
+
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+for arch in ["qwen3-0.6b", "h2o-danube-1.8b"]:
+    cfg = REGISTRY[arch].reduced()
+    m_ref = build_model(cfg)
+    m_ss = build_model(cfg, mesh=mesh, decode_cache_seqshard=True)
+    key = jax.random.PRNGKey(0)
+    params = m_ref.init(key)
+    B, S = 4, 16
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    c_ref = m_ref.init_cache(B, S)
+    c_ss = m_ss.init_cache(B, S)
+    dss = jax.jit(m_ss.decode_step)
+    for t in range(S):
+        l_ref, c_ref = m_ref.decode_step(params, c_ref, tokens[:, t:t+1],
+                                         jnp.int32(t))
+        l_ss, c_ss = dss(params, c_ss, tokens[:, t:t+1], jnp.int32(t))
+    err = float(jnp.abs(l_ref - l_ss).max())
+    assert err < 1e-3, (arch, err)
+    print("OK", arch, err)
+"""
+
+
+@pytest.mark.slow
+def test_seqshard_decode_matches_reference():
+    env = dict(os.environ)
+    r = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
+                       text=True, cwd=ROOT, env=env, timeout=1200)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert r.stdout.count("OK") == 2

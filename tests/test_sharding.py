@@ -1,0 +1,76 @@
+"""Sharding-rule validity: every spec divides its axis on the production
+mesh shape, for every architecture, params and caches. Uses AbstractMesh so
+no devices are needed."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, REGISTRY
+from repro.models import build_model
+from repro.sharding.rules import add_client_axis, cache_specs, param_specs
+
+MESH_SIZES = {"data": 16, "model": 16, "pod": 2}
+
+
+def _mesh():
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def _check_divisible(spec_tree, shape_tree, what):
+    leaves_s = jax.tree.leaves(spec_tree,
+                               is_leaf=lambda x: isinstance(x, P))
+    leaves_a = jax.tree.leaves(shape_tree)
+    assert len(leaves_s) == len(leaves_a), what
+    for spec, arr in zip(leaves_s, leaves_a):
+        dims = tuple(spec)
+        assert len(dims) <= arr.ndim, (what, spec, arr.shape)
+        for i, ax in enumerate(dims):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            factor = 1
+            for a in axes:
+                factor *= MESH_SIZES[a]
+            assert arr.shape[i] % factor == 0, \
+                f"{what}: dim {i} of {arr.shape} not divisible by " \
+                f"{factor} ({spec})"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divisible(arch):
+    cfg = REGISTRY[arch]
+    model = build_model(cfg, vocab_pad_multiple=2048)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_specs(model, cfg, _mesh())
+    _check_divisible(specs, shapes, f"{arch} params")
+    # client-stacked variant
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((2,) + s.shape, s.dtype), shapes)
+    _check_divisible(add_client_axis(specs), stacked,
+                     f"{arch} stacked params")
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if REGISTRY[a].family != "audio"])
+@pytest.mark.parametrize("batch,seq", [(128, 32768), (1, 524288)])
+def test_cache_specs_divisible(arch, batch, seq):
+    cfg = REGISTRY[arch]
+    if seq == 524288 and not cfg.supports_long_context:
+        cfg = cfg.with_window(4096)
+    model = build_model(cfg, vocab_pad_multiple=2048)
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, seq))
+    specs = cache_specs(model, cfg, batch, seq, shard_seq=(batch == 1))
+    _check_divisible(specs, shapes, f"{arch} cache b{batch}")
+
+
+def test_kv_replication_rule():
+    """GQA kv heads that don't divide the model axis must be replicated."""
+    cfg = REGISTRY["qwen3-4b"]  # kv=8 < 16
+    model = build_model(cfg, vocab_pad_multiple=2048)
+    specs = param_specs(model, cfg, _mesh())
+    wk_spec = specs["layers"]["attn"]["wk"]
+    assert tuple(wk_spec) == (None, None, None)  # (layer, d, kv*hd) replicated
+    wq_spec = specs["layers"]["attn"]["wq"]
+    assert "model" in tuple(wq_spec)
