@@ -2,18 +2,25 @@
 chosen (arch x shape) pairs and records roofline terms per iteration.
 
   PYTHONPATH=src python -m benchmarks.perf_hillclimb [--pair h1|h2|h3]
+  PYTHONPATH=src python -m benchmarks.perf_hillclimb --dpfl [--rounds R]
 
 Pairs (chosen from the baseline table; rationale in EXPERIMENTS.md §Perf):
   h1: kimi-k2-1t-a32b x decode_32k  (worst roofline fraction, memory-bound)
   h2: granite-20b     x train_4k    (most collective-bound)
   h3: qwen3-4b        x train_4k multi-pod (paper-representative: DPFL
       cross-pod mixing dominates the collective term)
+
+--dpfl benchmarks the DPFL round loop itself: rounds/sec of the original
+host-driven python loop (`run_dpfl_reference`, per-round dispatches +
+np.asarray comm syncs) vs the compiled device-resident round engine
+(`run_dpfl`, one jitted round_step) — the ISSUE-1 tentpole win.
 """
 import argparse
 import json
 import os
 import subprocess
 import sys
+import time
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT = "benchmarks/results/perf"
@@ -57,10 +64,48 @@ def run_variant(arch, shape, mesh, tag, opts):
     return json.load(open(fn))
 
 
+def bench_dpfl_rounds(rounds=10, n_clients=16, repeats=2):
+    """rounds/sec: host-driven reference loop vs compiled round engine.
+    Preprocessing (shared) is excluded by timing whole runs minus a
+    0-round run; track_history=False keeps the new path device-resident."""
+    from repro.core import DPFLConfig, run_dpfl, run_dpfl_reference
+    from benchmarks.common import standard_setting
+
+    _, _, engine = standard_setting(n_clients=n_clients)
+    kw = dict(tau_init=2, tau_train=2, budget=4, seed=0,
+              track_history=False)
+
+    def time_path(fn, label):
+        fn(engine, DPFLConfig(rounds=1, **kw))  # warm up compiles
+        t0 = time.perf_counter()
+        fn(engine, DPFLConfig(rounds=0, **kw))
+        pre = time.perf_counter() - t0
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn(engine, DPFLConfig(rounds=rounds, **kw))
+            best = min(best, time.perf_counter() - t0 - pre)
+        rps = rounds / best
+        print(f"dpfl,{label},ok,{best:.3f},{rps:.3f},,,,")
+        return rps
+
+    print("pair,tag,status,loop_s,rounds_per_s,,,,")
+    ref = time_path(run_dpfl_reference, "host_loop")
+    new = time_path(run_dpfl, "round_engine")
+    print(f"dpfl,speedup,ok,,{new / ref:.2f}x,,,,")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pair", default="")
+    ap.add_argument("--dpfl", action="store_true",
+                    help="benchmark DPFL rounds/sec old-vs-new round loop")
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--clients", type=int, default=16)
     args = ap.parse_args()
+    if args.dpfl:
+        bench_dpfl_rounds(rounds=args.rounds, n_clients=args.clients)
+        return
     os.makedirs(OUT, exist_ok=True)
     print("pair,tag,status,compute_s,memory_s,collective_s,dominant,"
           "coll_bytes,args_bytes")

@@ -11,7 +11,7 @@ import argparse
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.core import DPFLConfig, graph_stats, run_dpfl
+from repro.core import DPFLConfig, graph_stats, run_dpfl, run_dpfl_reference
 from repro.data import make_federated_classification
 from repro.fl.baselines import BASELINES, run_baseline
 from repro.fl.engine import FLEngine
@@ -34,6 +34,10 @@ def main():
     ap.add_argument("--baselines", default="local,fedavg")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--engine", default="compiled",
+                    choices=["compiled", "host"],
+                    help="compiled = device-resident round engine; "
+                         "host = original python round loop (reference)")
     args = ap.parse_args()
 
     img = args.model == "cnn"
@@ -59,7 +63,8 @@ def main():
     cfg = DPFLConfig(rounds=args.rounds, tau_init=args.tau_init,
                      tau_train=args.tau_train, budget=args.budget,
                      refresh_period=args.refresh_period, seed=args.seed)
-    res = run_dpfl(engine, cfg)
+    runner = run_dpfl if args.engine == "compiled" else run_dpfl_reference
+    res = runner(engine, cfg)
     results["dpfl"] = res.test_acc
     print(f"{'dpfl':12s} acc={res.test_acc.mean():.4f} "
           f"var={res.test_acc.var():.5f}")

@@ -5,6 +5,15 @@ budgeted candidate graph Omega. Training loop: tau_train local epochs, GGC
 re-selects C_k within Omega_k (optionally every P rounds — paper Table 3),
 weighted aggregation over C_k ∪ {k} (Eq. 4). Best-on-validation models are
 retained per client and used for final test accuracy (paper §4.1).
+
+The round loop is the compiled device-resident engine (DESIGN.md §8): one
+jitted ``round_step`` fuses local-train -> GGC refresh -> Eq.-4 mix ->
+eval -> best-model update over a `RoundState` pytree. Communication
+accounting lives in device-side counters; histories are preallocated
+device buffers pulled off device only at the end (or every
+``cfg.history_every`` rounds). ``run_dpfl_reference`` keeps the original
+host-driven python loop as the equivalence/perf baseline
+(`benchmarks/perf_hillclimb.py --dpfl` reports rounds/sec for both).
 """
 from __future__ import annotations
 
@@ -16,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..fl.engine import FLEngine
+from ..fl.round_engine import init_round_state, make_round_step, run_rounds
 from .graph import all_clients_graph, make_bggc, mixing_matrix, mix_flat
 
 
@@ -30,7 +40,10 @@ class DPFLConfig:
     graph_impl: str = "ggc"           # ggc | naive (oracle)
     random_graph: bool = False        # Fig. 3 ablation: random C_k
     track_history: bool = True
-
+    mix_impl: Optional[str] = None    # kernels.ops.graph_mix impl override
+    history_every: int = 0            # pull histories off device every K
+    #                                   rounds (0 = once at the end); also
+    #                                   bounds the device history buffers
 
 @dataclass
 class DPFLResult:
@@ -59,17 +72,17 @@ def _symmetry(adj: np.ndarray) -> float:
     return float((a & a.T).sum() / denom) if denom else 1.0
 
 
-def run_dpfl(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
+def _preprocess(engine: FLEngine, cfg: DPFLConfig, reward_fn, budget: int):
+    """Alg. 1 lines 1-5: same-init clients, tau_init local epochs, BGGC (or
+    random) candidate graph Omega, one Eq.-4 mix over Omega. Shared by the
+    compiled and the reference round loops, so both start from the exact
+    same (omega, flat) and differ only in how the round loop executes."""
     data = engine.data
     N = data.n_clients
-    budget = cfg.budget if cfg.budget is not None else N - 1
+    p = engine.p
     key = jax.random.PRNGKey(cfg.seed)
     k_init, k_pre, k_graph, k_train = jax.random.split(key, 4)
 
-    reward_fn = engine.make_reward_fn()
-    p = engine.p
-
-    # ---- preprocess (Alg. 1 lines 1-5)
     stacked = engine.init_clients(k_init)
     stacked, _ = engine.local_train(stacked, k_pre, epochs=cfg.tau_init)
     flat = engine.flatten(stacked)
@@ -87,43 +100,160 @@ def run_dpfl(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
         omega = jnp.asarray(omega)
     else:
         # BGGC: batched preprocessing within the communication budget
-        bggc = make_bggc(reward_fn, budget)
+        bggc = make_bggc(reward_fn, budget, mix_impl=cfg.mix_impl)
         keys = [jax.random.fold_in(k_graph, i) for i in range(N)]
         omega = jnp.stack([
             bggc(keys[k_], jnp.int32(k_), full_mask[k_], flat, p)
             for k_ in range(N)])
 
     A = mixing_matrix(omega, p)
-    flat = mix_flat(A, flat)
-    stacked = engine.unflatten(flat)
+    flat = mix_flat(A, flat, impl=cfg.mix_impl)
+    return omega, flat, k_graph, k_train
 
+
+def _make_dpfl_aggregate(engine: FLEngine, cfg: DPFLConfig, reward_fn,
+                         budget: int, hist_len: int):
+    """The traced communication step of one DPFL round: conditional GGC
+    refresh (Alg. 1 line 9, every cfg.refresh_period rounds), Eq.-4 mixing,
+    and device-side comm-download accounting. Omega and the graph PRNG key
+    are read from ``aux`` (not closed over), so the compiled step is
+    reusable across runs."""
+    p = engine.p
+
+    def aggregate(flat, aux, t):
+        adj = aux["adj"]
+        omega = aux["omega"]
+        N = adj.shape[0]
+        if cfg.random_graph:
+            new_adj = adj  # Omega is the (fixed, random) graph
+            comm_t = jnp.sum(adj) - N
+        else:
+            refresh = (t % cfg.refresh_period) == 0
+            # line 9 needs all of Omega_k; aggregation-only rounds download
+            # the currently selected C_k
+            comm_t = jnp.where(refresh, jnp.sum(omega), jnp.sum(adj)) - N
+            new_adj = jax.lax.cond(
+                refresh,
+                lambda f: all_clients_graph(
+                    jax.random.fold_in(aux["k_graph"], 1000 + t), f, p,
+                    omega, reward_fn, budget, impl=cfg.graph_impl,
+                    mix_impl=cfg.mix_impl),
+                lambda f: adj,
+                flat)
+        A = mixing_matrix(new_adj, p)
+        mixed = mix_flat(A, flat, impl=cfg.mix_impl)
+        aux = dict(aux, adj=new_adj,
+                   comm=aux["comm"].at[t].set(comm_t.astype(jnp.int32)))
+        if hist_len:
+            aux["graph_hist"] = aux["graph_hist"].at[t % hist_len].set(
+                new_adj)
+        return mixed, aux
+
+    return aggregate
+
+
+def _cached_round_step(engine: FLEngine, cfg: DPFLConfig, budget: int,
+                       hist_len: int):
+    """Fetch-or-build the compiled DPFL round_step. Memoized on the engine
+    keyed by the static knobs; every run-varying array rides in RoundState,
+    so repeated runs (sweeps, benchmarks, serving refreshes) reuse the
+    compiled executable with zero retracing."""
+    cache = getattr(engine, "_dpfl_round_step_cache", None)
+    if cache is None:
+        cache = engine._dpfl_round_step_cache = {}
+    key = (cfg.tau_train, cfg.refresh_period, cfg.random_graph,
+           cfg.graph_impl, cfg.mix_impl, budget, hist_len)
+    if key not in cache:
+        reward_fn = engine.make_reward_fn()
+        aggregate = _make_dpfl_aggregate(engine, cfg, reward_fn, budget,
+                                         hist_len)
+        cache[key] = make_round_step(engine, tau=cfg.tau_train,
+                                     aggregate=aggregate,
+                                     hist_len=hist_len)
+    return cache[key]
+
+
+def run_dpfl(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
+    """Algorithm 1 on the compiled round engine."""
+    N = engine.data.n_clients
+    budget = cfg.budget if cfg.budget is not None else N - 1
+    reward_fn = engine.make_reward_fn()
+
+    # ---- preprocess (Alg. 1 lines 1-5)
+    omega, flat, k_graph, k_train = _preprocess(engine, cfg, reward_fn,
+                                                budget)
+    result = DPFLResult(test_acc=None, omega=np.asarray(omega))
+    result.comm_preprocess = N * (N - 1)  # BGGC streams all peers (batched)
+
+    # ---- training loop (Alg. 1 lines 6-12): one compiled round_step
+    if cfg.track_history:
+        hist_len = (min(cfg.history_every, cfg.rounds)
+                    if cfg.history_every else cfg.rounds)
+    else:
+        hist_len = 0
+    aux = {"adj": omega, "omega": omega, "k_graph": k_graph,
+           "comm": jnp.zeros((cfg.rounds,), jnp.int32)}
+    if hist_len:
+        aux["graph_hist"] = jnp.zeros((hist_len, N, N), bool)
+    round_step = _cached_round_step(engine, cfg, budget, hist_len)
+    state = init_round_state(flat, k_train, hist_len=hist_len, aux=aux)
+
+    def flush_histories(st, k):
+        # the ONLY host transfers: every hist_len rounds + once at the end
+        result.val_acc_history.extend(np.asarray(st.val_hist[:k]))
+        result.graph_history.extend(np.asarray(st.aux["graph_hist"][:k]))
+
+    state = run_rounds(
+        round_step, state, cfg.rounds,
+        on_flush=flush_histories if hist_len else None,
+        flush_every=hist_len if (hist_len and cfg.history_every) else 0)
+
+    result.comm_downloads = [int(c) for c in np.asarray(state.aux["comm"])]
+    best = engine.unflatten(state.best_flat)
+    test_acc, _ = engine.eval_test(best)
+    result.test_acc = np.asarray(test_acc)
+    result.best_flat = np.asarray(state.best_flat)
+    return result
+
+
+def run_dpfl_reference(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
+    """The original host-driven round loop (per-round dispatches, host-side
+    comm accounting). Kept as the equivalence oracle for the compiled
+    engine — `tests/test_round_engine.py` asserts matching comm counters —
+    and as the old path in `benchmarks/perf_hillclimb.py --dpfl`."""
+    N = engine.data.n_clients
+    budget = cfg.budget if cfg.budget is not None else N - 1
+    reward_fn = engine.make_reward_fn()
+    p = engine.p
+
+    omega, flat, k_graph, k_train = _preprocess(engine, cfg, reward_fn,
+                                                budget)
+    stacked = engine.unflatten(flat)
     best_val = jnp.full((N,), -jnp.inf)
     best_flat = engine.flatten(stacked)
     result = DPFLResult(test_acc=None, omega=np.asarray(omega))
-    result.comm_preprocess = N * (N - 1)  # BGGC streams all peers (batched)
+    result.comm_preprocess = N * (N - 1)
     adj = omega
 
-    # ---- training loop (Alg. 1 lines 6-12)
     for t in range(cfg.rounds):
         stacked, _ = engine.local_train(
             stacked, jax.random.fold_in(k_train, t), epochs=cfg.tau_train)
         flat = engine.flatten(stacked)
         refresh = (not cfg.random_graph) and (t % cfg.refresh_period == 0)
         if refresh:
-            # line 9: download all of Omega_k to run GGC
             result.comm_downloads.append(
                 int(np.asarray(omega).sum()) - N)
         else:
-            # aggregation only: download the currently selected C_k
             result.comm_downloads.append(int(np.asarray(adj).sum()) - N)
         if cfg.random_graph:
             adj = omega
         elif refresh:
             adj = all_clients_graph(
                 jax.random.fold_in(k_graph, 1000 + t), flat, p, omega,
-                reward_fn, budget, impl=cfg.graph_impl)
+                reward_fn, budget, impl=cfg.graph_impl,
+                mix_impl=cfg.mix_impl)
         A = mixing_matrix(adj, p)
-        flat = mix_flat(A, flat)
+        flat = mix_flat(A, flat, impl=cfg.mix_impl)
         stacked = engine.unflatten(flat)
 
         val_acc, val_loss = engine.eval_val(stacked)

@@ -9,21 +9,26 @@ probability a/(a+b) (p=1 when a=b=0 per the paper), until |C_k| = B_c.
 TPU adaptation (DESIGN.md §3): the sequential loop is a seeded `lax.scan`
 carrying (mask_X, mask_Y, w^X, w^Y, p_X, p_Y); the four reward probes per
 step are one vmapped forward. The running sums are exactly BGGC's trick, so
-GGC and BGGC share the decision kernel and Theorem 1 holds by construction
-— and is *tested* against a literal recompute-from-scratch reference
-(`ggc_naive`) plus a batched BGGC (`bggc`) that never holds more than B_c
-client models.
+GGC, BGGC and the heterogeneous-budget variant share ONE decision kernel
+(`greedy_decision_step`) and Theorem 1 holds by construction — and is
+*tested* against a literal recompute-from-scratch reference (`ggc_naive`)
+plus a batched BGGC (`bggc`) that never holds more than B_c client models.
 
 Coin flips use fold_in(key, candidate_id), making the random stream
 independent of batching order — the seeded-randomness premise of Thm 1.
+
+All set-average / aggregation matmuls route through the dispatching
+`kernels.ops.graph_mix` (Pallas on TPU, pure-jnp fp32 reference elsewhere);
+pass ``mix_impl`` to pin an implementation (DESIGN.md §4).
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from ..kernels import ops as _kops
 
 
 # ------------------------------------------------------------------ mixing
@@ -49,71 +54,126 @@ def mix_pytree(A, stacked_params):
         stacked_params)
 
 
-def mix_flat(A, flat_w, mix_fn=None):
-    """(N, P) client-stacked flattened params. mix_fn may be the Pallas
-    graph_mix kernel; defaults to a plain matmul."""
+def mix_flat(A, flat_w, mix_fn=None, *, impl: Optional[str] = None):
+    """(N, P) client-stacked flattened params through the Eq.-4 mixing
+    matmul. Dispatches to `kernels.ops.graph_mix` (Pallas on TPU, fp32
+    reference elsewhere); ``impl`` pins an implementation, ``mix_fn``
+    overrides the whole op (legacy hook)."""
     if mix_fn is not None:
         return mix_fn(A, flat_w)
-    return (A.astype(jnp.float32) @ flat_w.astype(jnp.float32)
-            ).astype(flat_w.dtype)
+    return _kops.graph_mix(A, flat_w, impl=impl)
+
+
+def weighted_sum(mask_p, flat_w, *, impl: Optional[str] = None):
+    """sum_n mask_p[n] * flat_w[n] — the set-average numerator used by the
+    greedy probes, routed through the same graph_mix kernel as Eq. 4
+    ((1, N) @ (N, P) row-matmul in fp32)."""
+    out = _kops.graph_mix(mask_p.astype(jnp.float32)[None, :],
+                          flat_w.astype(jnp.float32), impl=impl)
+    return out[0]
 
 
 # ----------------------------------------------------------- GGC decisions
 
 
-def make_ggc(reward_fn: Callable, budget: int):
-    """Build the jittable GGC kernel.
+class GreedyCarry(NamedTuple):
+    """Running double-greedy state: grow/shrink masks, their weighted
+    parameter sums and total weights, and the selection count."""
+    maskX: jax.Array    # (N,) bool — grow set X (incl. client k)
+    maskY: jax.Array    # (N,) bool — shrink set Y
+    wX: jax.Array       # (P,) — sum_{i in X} p_i w_i
+    wY: jax.Array       # (P,) — sum_{i in Y} p_i w_i
+    pX: jax.Array       # () — sum_{i in X} p_i
+    pY: jax.Array       # () — sum_{i in Y} p_i
+    nsel: jax.Array     # () int32 — |C_k| so far
+
+
+def greedy_decision_step(reward_fn: Callable):
+    """THE single copy of the seeded double-greedy decision body.
+
+    Returns ``step(carry, j, w_j, *, key, k_idx, cand_mask, p, budget)``
+    processing candidate ``j`` (model ``w_j``): four reward probes batched
+    into one vmapped forward, the a/(a+b) coin flip on the
+    ``fold_in(key, j+1)`` stream, and the running-sum accept/reject update.
+    ``budget`` is a *traced* int32 scalar, so one compiled kernel serves
+    static (Alg. 2), batched (Alg. 3) and per-client heterogeneous budgets
+    alike — Theorem-1 equivalence across the three entry points holds by
+    construction (tested against `make_ggc_naive`).
+    """
+
+    def step(carry: GreedyCarry, j, w_j, *, key, k_idx, cand_mask, p,
+             budget) -> GreedyCarry:
+        maskX, maskY, wX, wY, pX, pY, nsel = carry
+        is_cand = cand_mask[j]
+        p_j = p[j]
+        # four reward probes, batched into one vmapped forward
+        probes = jnp.stack([
+            wX / pX,
+            (wX + p_j * w_j) / (pX + p_j),
+            wY / pY,
+            (wY - p_j * w_j) / jnp.maximum(pY - p_j, 1e-12),
+        ])
+        r = jax.vmap(lambda fw: reward_fn(fw, k_idx))(probes)
+        a = jnp.maximum(r[1] - r[0], 0.0)
+        b = jnp.maximum(r[3] - r[2], 0.0)
+        prob = jnp.where(a + b > 0, a / (a + b), 1.0)
+        u = jax.random.uniform(jax.random.fold_in(key, j + 1))
+        add = (u < prob) & is_cand & (nsel < budget)
+        rem = (~(u < prob)) & is_cand
+        return GreedyCarry(
+            maskX=maskX.at[j].set(maskX[j] | add),
+            maskY=maskY.at[j].set(maskY[j] & ~rem),
+            wX=jnp.where(add, wX + p_j * w_j, wX),
+            wY=jnp.where(rem, wY - p_j * w_j, wY),
+            pX=jnp.where(add, pX + p_j, pX),
+            pY=jnp.where(rem, pY - p_j, pY),
+            nsel=nsel + add.astype(jnp.int32))
+
+    return step
+
+
+def _greedy_init(k_idx, cand_mask, flat_w, p, *, mix_impl=None):
+    """Shared GGC initialization: X = {k}, Y = Omega_k ∪ {k}, running sums
+    via the graph_mix row-matmul."""
+    N = flat_w.shape[0]
+    maskX = jnp.zeros(N, bool).at[k_idx].set(True)
+    maskY = cand_mask | maskX
+    return GreedyCarry(
+        maskX=maskX, maskY=maskY,
+        wX=p[k_idx] * flat_w[k_idx],
+        wY=weighted_sum(maskY * p, flat_w, impl=mix_impl),
+        pX=p[k_idx], pY=jnp.sum(maskY * p),
+        nsel=jnp.int32(0))
+
+
+def make_ggc(reward_fn: Callable, budget: int, *,
+             mix_impl: Optional[str] = None):
+    """Build the jittable GGC kernel (Algorithm 2).
 
     reward_fn(flat_params (P,), client_idx) -> scalar reward (higher =
     better), i.e. -validation loss for that client.
 
-    Returns ggc(key, k_idx, cand_mask (N,), flat_w (N,P), p (N,)) -> mask_X
-    (N,) bool of selected collaborators INCLUDING k itself.
+    Returns ggc(key, k_idx, cand_mask (N,), flat_w (N,P), p (N,),
+    budget_k=None) -> mask_X (N,) bool of selected collaborators INCLUDING
+    k itself. ``budget_k`` optionally overrides the static budget with a
+    traced per-client scalar (the heterogeneous variant).
     """
+    step = greedy_decision_step(reward_fn)
 
-    def ggc(key, k_idx, cand_mask, flat_w, p):
+    def ggc(key, k_idx, cand_mask, flat_w, p, budget_k=None):
         N = flat_w.shape[0]
+        b = jnp.int32(budget) if budget_k is None else \
+            jnp.asarray(budget_k, jnp.int32)
         cand_mask = cand_mask & (jnp.arange(N) != k_idx)
-        maskX = jnp.zeros(N, bool).at[k_idx].set(True)
-        maskY = cand_mask | maskX
-        wX = p[k_idx] * flat_w[k_idx]
-        pX = p[k_idx]
-        wY = jnp.einsum("n,np->p", maskY * p, flat_w)
-        pY = jnp.sum(maskY * p)
+        carry = _greedy_init(k_idx, cand_mask, flat_w, p, mix_impl=mix_impl)
         order = jax.random.permutation(jax.random.fold_in(key, 0), N)
 
         def body(carry, j):
-            maskX, maskY, wX, wY, pX, pY, nsel = carry
-            is_cand = cand_mask[j]
-            w_j = flat_w[j]
-            p_j = p[j]
-            # four reward probes, batched into one vmapped forward
-            probes = jnp.stack([
-                wX / pX,
-                (wX + p_j * w_j) / (pX + p_j),
-                wY / pY,
-                (wY - p_j * w_j) / jnp.maximum(pY - p_j, 1e-12),
-            ])
-            r = jax.vmap(lambda fw: reward_fn(fw, k_idx))(probes)
-            a = jnp.maximum(r[1] - r[0], 0.0)
-            b = jnp.maximum(r[3] - r[2], 0.0)
-            prob = jnp.where(a + b > 0, a / (a + b), 1.0)
-            u = jax.random.uniform(jax.random.fold_in(key, j + 1))
-            within_budget = nsel < budget
-            add = (u < prob) & is_cand & within_budget
-            rem = (~(u < prob)) & is_cand
-            maskX = maskX.at[j].set(maskX[j] | add)
-            maskY = maskY.at[j].set(maskY[j] & ~rem)
-            wX = jnp.where(add, wX + p_j * w_j, wX)
-            pX = jnp.where(add, pX + p_j, pX)
-            wY = jnp.where(rem, wY - p_j * w_j, wY)
-            pY = jnp.where(rem, pY - p_j, pY)
-            nsel = nsel + add.astype(jnp.int32)
-            return (maskX, maskY, wX, wY, pX, pY, nsel), None
+            return step(carry, j, flat_w[j], key=key, k_idx=k_idx,
+                        cand_mask=cand_mask, p=p, budget=b), None
 
-        init = (maskX, maskY, wX, wY, pX, pY, jnp.int32(0))
-        (maskX, *_), _ = jax.lax.scan(body, init, order)
-        return maskX
+        carry, _ = jax.lax.scan(body, carry, order)
+        return carry.maskX
 
     return ggc
 
@@ -162,18 +222,21 @@ def make_ggc_naive(reward_fn: Callable, budget: int):
     return ggc
 
 
-def make_bggc(reward_fn: Callable, budget: int):
+def make_bggc(reward_fn: Callable, budget: int, *,
+              mix_impl: Optional[str] = None):
     """Batched GGC (Algorithm 3): the preprocessing-phase variant that
     receives models in batches of <= budget and keeps only the streaming
     sums w^X / w^Y — never more than O(B_c) model storage.
 
     The python loop over batches mirrors the two communication phases of
-    Algorithm 3; decisions are the shared seeded kernel, so the output
-    equals GGC's (Theorem 1; tested).
+    Algorithm 3; decisions are the shared `greedy_decision_step`, so the
+    output equals GGC's (Theorem 1; tested).
     """
+    step = greedy_decision_step(reward_fn)
 
     def bggc(key, k_idx, cand_mask, flat_w, p):
         N, P = flat_w.shape
+        b = jnp.int32(budget)
         cand_mask = jnp.asarray(cand_mask) & (jnp.arange(N) != k_idx)
         # --- phase 1: stream batches to accumulate w^Y (Alg. 3 lines 2-7)
         maskY0 = cand_mask | jnp.zeros(N, bool).at[k_idx].set(True)
@@ -183,130 +246,74 @@ def make_bggc(reward_fn: Callable, budget: int):
         for s in range(0, N, B):
             batch = jnp.arange(s, min(s + B, N))
             m = maskY0[batch] & (batch != k_idx)
-            wY = wY + jnp.einsum("n,np->p", m * p[batch], flat_w[batch])
+            wY = wY + weighted_sum(m * p[batch], flat_w[batch],
+                                   impl=mix_impl)
             pY = pY + jnp.sum(m * p[batch])
         # --- phase 2: batched decisions in the SAME shuffled order
         maskX = jnp.zeros(N, bool).at[k_idx].set(True)
-        maskY = maskY0
-        wX = p[k_idx] * flat_w[k_idx]
-        pX = p[k_idx]
-        nsel = jnp.int32(0)
+        carry = GreedyCarry(maskX=maskX, maskY=maskY0,
+                            wX=p[k_idx] * flat_w[k_idx], wY=wY,
+                            pX=p[k_idx], pY=pY, nsel=jnp.int32(0))
         order = jax.random.permutation(jax.random.fold_in(key, 0), N)
 
         def body(carry, jw):
-            maskX, maskY, wX, wY, pX, pY, nsel = carry
             j, w_j = jw  # the batch transmits model w_j with its index
-            is_cand = cand_mask[j]
-            p_j = p[j]
-            probes = jnp.stack([
-                wX / pX,
-                (wX + p_j * w_j) / (pX + p_j),
-                wY / pY,
-                (wY - p_j * w_j) / jnp.maximum(pY - p_j, 1e-12),
-            ])
-            r = jax.vmap(lambda fw: reward_fn(fw, k_idx))(probes)
-            a = jnp.maximum(r[1] - r[0], 0.0)
-            b = jnp.maximum(r[3] - r[2], 0.0)
-            prob = jnp.where(a + b > 0, a / (a + b), 1.0)
-            u = jax.random.uniform(jax.random.fold_in(key, j + 1))
-            add = (u < prob) & is_cand & (nsel < budget)
-            rem = (~(u < prob)) & is_cand
-            maskX = maskX.at[j].set(maskX[j] | add)
-            maskY = maskY.at[j].set(maskY[j] & ~rem)
-            wX = jnp.where(add, wX + p_j * w_j, wX)
-            pX = jnp.where(add, pX + p_j, pX)
-            wY = jnp.where(rem, wY - p_j * w_j, wY)
-            pY = jnp.where(rem, pY - p_j, pY)
-            return (maskX, maskY, wX, wY, pX, pY,
-                    nsel + add.astype(jnp.int32)), None
+            return step(carry, j, w_j, key=key, k_idx=k_idx,
+                        cand_mask=cand_mask, p=p, budget=b), None
 
-        carry = (maskX, maskY, wX, wY, pX, pY, nsel)
         for s in range(0, N, B):  # each iteration receives <= B_c models
             idx = order[s:min(s + B, N)]
             batch_w = flat_w[idx]  # the only model storage: <= B_c rows
             carry, _ = jax.lax.scan(body, carry, (idx, batch_w))
-        return carry[0]
+        return carry.maskX
 
     return bggc
 
 
+def make_ggc_heterogeneous(reward_fn: Callable, max_budget: int, *,
+                           mix_impl: Optional[str] = None):
+    """Beyond-paper extension (the paper's §Limitations, implemented):
+    per-client budgets B_c^k — the budget enters as a traced scalar so
+    one compiled kernel serves every client. Thin wrapper over the unified
+    `make_ggc` kernel (``max_budget`` kept for API compatibility; the
+    traced budget is what constrains selection).
+
+    Returns ggc(key, k_idx, cand_mask, flat_w, p, budget_k) -> mask_X."""
+    base = make_ggc(reward_fn, int(max_budget), mix_impl=mix_impl)
+
+    def ggc(key, k_idx, cand_mask, flat_w, p, budget_k):
+        return base(key, k_idx, cand_mask, flat_w, p, budget_k=budget_k)
+
+    return ggc
+
+
 def all_clients_graph(key, flat_w, p, cand_masks, reward_fn, budget,
-                      impl: str = "ggc"):
+                      impl: str = "ggc", mix_impl: Optional[str] = None):
     """Run graph construction for every client (vmap over k).
 
     cand_masks: (N, N) bool, row k = Omega_k. Returns adjacency (N, N) bool
     with adj[k, i]=1 iff i selected for k (diag True)."""
     N = flat_w.shape[0]
-    maker = {"ggc": make_ggc, "naive": make_ggc_naive}[impl]
-    ggc = maker(reward_fn, budget)
+    if impl == "naive":
+        ggc = make_ggc_naive(reward_fn, budget)
+    else:
+        ggc = make_ggc(reward_fn, budget, mix_impl=mix_impl)
     keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(N))
     return jax.vmap(ggc, in_axes=(0, 0, 0, None, None))(
         keys, jnp.arange(N), cand_masks, flat_w, p)
 
 
-def make_ggc_heterogeneous(reward_fn: Callable, max_budget: int):
-    """Beyond-paper extension (the paper's §Limitations, implemented):
-    per-client budgets B_c^k — the budget enters as a traced scalar so
-    one compiled kernel serves every client.
-
-    Returns ggc(key, k_idx, cand_mask, flat_w, p, budget_k) -> mask_X."""
-    base = make_ggc(reward_fn, max_budget)
-
-    def ggc(key, k_idx, cand_mask, flat_w, p, budget_k):
-        N = flat_w.shape[0]
-        cand_mask = cand_mask & (jnp.arange(N) != k_idx)
-        maskX = jnp.zeros(N, bool).at[k_idx].set(True)
-        maskY = cand_mask | maskX
-        wX = p[k_idx] * flat_w[k_idx]
-        pX = p[k_idx]
-        wY = jnp.einsum("n,np->p", maskY * p, flat_w)
-        pY = jnp.sum(maskY * p)
-        order = jax.random.permutation(jax.random.fold_in(key, 0), N)
-
-        def body(carry, j):
-            maskX, maskY, wX, wY, pX, pY, nsel = carry
-            is_cand = cand_mask[j]
-            w_j = flat_w[j]
-            p_j = p[j]
-            probes = jnp.stack([
-                wX / pX,
-                (wX + p_j * w_j) / (pX + p_j),
-                wY / pY,
-                (wY - p_j * w_j) / jnp.maximum(pY - p_j, 1e-12),
-            ])
-            r = jax.vmap(lambda fw: reward_fn(fw, k_idx))(probes)
-            a = jnp.maximum(r[1] - r[0], 0.0)
-            b = jnp.maximum(r[3] - r[2], 0.0)
-            prob = jnp.where(a + b > 0, a / (a + b), 1.0)
-            u = jax.random.uniform(jax.random.fold_in(key, j + 1))
-            add = (u < prob) & is_cand & (nsel < budget_k)
-            rem = (~(u < prob)) & is_cand
-            maskX = maskX.at[j].set(maskX[j] | add)
-            maskY = maskY.at[j].set(maskY[j] & ~rem)
-            wX = jnp.where(add, wX + p_j * w_j, wX)
-            pX = jnp.where(add, pX + p_j, pX)
-            wY = jnp.where(rem, wY - p_j * w_j, wY)
-            pY = jnp.where(rem, pY - p_j, pY)
-            return (maskX, maskY, wX, wY, pX, pY,
-                    nsel + add.astype(jnp.int32)), None
-
-        init = (maskX, maskY, wX, wY, pX, pY, jnp.int32(0))
-        (maskX, *_), _ = jax.lax.scan(body, init, order)
-        return maskX
-
-    del base
-    return ggc
-
-
 def all_clients_graph_heterogeneous(key, flat_w, p, cand_masks, reward_fn,
-                                    budgets, reachability=None):
+                                    budgets, reachability=None,
+                                    mix_impl: Optional[str] = None):
     """Per-client budgets + optional communicability restriction (both
     from the paper's §Limitations). budgets: (N,) int32; reachability:
     (N, N) bool — client k may only ever talk to reachable peers."""
     N = flat_w.shape[0]
     if reachability is not None:
         cand_masks = cand_masks & reachability
-    ggc = make_ggc_heterogeneous(reward_fn, int(jnp.max(budgets)))
+    ggc = make_ggc_heterogeneous(reward_fn, int(jnp.max(budgets)),
+                                 mix_impl=mix_impl)
     keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(N))
     return jax.vmap(ggc, in_axes=(0, 0, 0, None, None, 0))(
         keys, jnp.arange(N), cand_masks, flat_w, p,

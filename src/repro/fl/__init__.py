@@ -1,4 +1,8 @@
 from .engine import FLEngine
+from .round_engine import (RoundState, init_round_state, make_round_step,
+                           run_rounds)
 from .baselines import BASELINES, run_baseline
 
-__all__ = ["FLEngine", "BASELINES", "run_baseline"]
+__all__ = ["FLEngine", "BASELINES", "run_baseline",
+           "RoundState", "init_round_state", "make_round_step",
+           "run_rounds"]

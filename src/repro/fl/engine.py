@@ -57,6 +57,10 @@ class FLEngine:
         return jax.vmap(self._unravel)(flat)
 
     def _build(self):
+        """Builds the raw traceable fns (`train_fn`, `eval_split_fn`,
+        `eval_val_fn` — composed into the compiled round engine, DESIGN.md
+        §5) and their standalone jitted wrappers (`local_train`,
+        `_eval_split`)."""
         model, opt = self.model, self.opt
         bs = self.batch_size
         loss_fn = self.loss_fn
@@ -91,25 +95,35 @@ class FLEngine:
                 epoch, (params, opt_state), jax.random.split(key, epochs))
             return params, losses.mean()
 
-        @functools.partial(jax.jit, static_argnames=("epochs",))
-        def local_train(stacked, key, epochs):
+        train_x = jnp.asarray(self.data.train_x)
+        train_y = jnp.asarray(self.data.train_y)
+
+        def train_fn(stacked, key, epochs):
             N = self.data.n_clients
             keys = jax.random.split(key, N)
             return jax.vmap(
                 lambda p, x, y, k: one_client_epochs(p, x, y, k, epochs)
-            )(stacked, jnp.asarray(self.data.train_x),
-              jnp.asarray(self.data.train_y), keys)
+            )(stacked, train_x, train_y, keys)
 
-        self.local_train = local_train
+        self.train_fn = train_fn
+        self.local_train = jax.jit(train_fn, static_argnames=("epochs",))
 
-        @jax.jit
-        def eval_split(stacked, xs, ys):
+        def eval_split_fn(stacked, xs, ys):
             return (jax.vmap(lambda p, x, y: self.acc_fn(p, {"x": x, "y": y}))
                     (stacked, xs, ys),
                     jax.vmap(lambda p, x, y: loss_fn(p, {"x": x, "y": y}))
                     (stacked, xs, ys))
 
-        self._eval_split = eval_split
+        self.eval_split_fn = eval_split_fn
+        self._eval_split = jax.jit(eval_split_fn)
+
+        val_x = jnp.asarray(self.data.val_x)
+        val_y = jnp.asarray(self.data.val_y)
+
+        def eval_val_fn(stacked):
+            return eval_split_fn(stacked, val_x, val_y)
+
+        self.eval_val_fn = eval_val_fn
 
     # ------------------------------------------------------------- metrics
     def eval_val(self, stacked):

@@ -1,0 +1,135 @@
+"""Device-resident FL round engine (DESIGN.md §8).
+
+One federated round — local train -> aggregate -> eval -> best-model
+tracking — is a single jitted ``round_step(state) -> state`` over a
+`RoundState` pytree that never leaves the device: flattened client params,
+best-on-validation tracking, the collaboration adjacency and comm counters
+all live in ``state``; the driving python loop only re-dispatches the same
+compiled program, so there are no per-round host syncs, no per-round
+``np.asarray`` blocking transfers and no flatten/unflatten churn across
+dispatch boundaries. Histories are preallocated device buffers pulled off
+device only at the end (or every K rounds, to bound device memory).
+
+Both the DPFL driver (`repro.core.dpfl.run_dpfl`) and every Table-1
+baseline (`repro.fl.baselines._loop`) run on this engine, so all workloads
+exercise the same compiled path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["t", "key", "flat", "best_val", "best_flat", "val_hist",
+                 "aux"],
+    meta_fields=[])
+@dataclasses.dataclass
+class RoundState:
+    """Everything one federated round reads and writes, as one pytree.
+
+    t:         () int32 — round counter (device-side; PRNG streams fold it)
+    key:       base PRNG key; round t trains with fold_in(key, t)
+    flat:      (N, P) client-stacked flattened params
+    best_val:  (N,) best validation accuracy seen per client
+    best_flat: (N, P) params at each client's best_val
+    val_hist:  (K, N) rolling validation-accuracy buffer, or None
+    aux:       method-specific pytree (DPFL: adjacency, comm counters,
+               candidate graph, graph-refresh key, graph history;
+               baselines: aggregate state dict)
+
+    All run-specific arrays (keys, graphs, counters) live HERE rather than
+    as closure constants, so a cached `round_step` retraces/recompiles
+    nothing across runs with the same static config.
+    """
+    t: jax.Array
+    key: jax.Array
+    flat: jax.Array
+    best_val: jax.Array
+    best_flat: jax.Array
+    val_hist: Any
+    aux: Any
+
+
+def init_round_state(flat, key, *, hist_len: int = 0, aux=None) -> RoundState:
+    """Fresh state from client-stacked flattened params (N, P)."""
+    N = flat.shape[0]
+    return RoundState(
+        t=jnp.int32(0),
+        key=key,
+        flat=flat,
+        best_val=jnp.full((N,), -jnp.inf),
+        best_flat=flat,
+        val_hist=(jnp.zeros((hist_len, N), jnp.float32)
+                  if hist_len else None),
+        aux={} if aux is None else aux)
+
+
+def make_round_step(engine, *, tau: int,
+                    aggregate: Optional[Callable] = None,
+                    local_train: Optional[Callable] = None,
+                    eval_flat: Optional[Callable] = None,
+                    hist_len: int = 0):
+    """Compile one federated round into ``round_step(state) -> state``.
+
+    tau:         local epochs per round (static)
+    aggregate:   (flat, aux, t) -> (flat, aux) — the traced communication
+                 step (mixing matmul, graph refresh, comm accounting).
+                 Default: no communication (local-only).
+    local_train: override of engine.train_fn(stacked, key, epochs)
+    eval_flat:   optional transform of the aggregated flat params that
+                 produces the evaluated/tracked model (e.g. APFL mixtures)
+    hist_len:    >0 writes val accuracy into state.val_hist[t % hist_len]
+    """
+    lt = local_train if local_train is not None else engine.train_fn
+    agg = aggregate if aggregate is not None else \
+        (lambda flat, aux, t: (flat, aux))
+
+    @jax.jit
+    def round_step(state: RoundState) -> RoundState:
+        t = state.t
+        stacked = engine.unflatten(state.flat)
+        stacked, _ = lt(stacked, jax.random.fold_in(state.key, t),
+                        epochs=tau)
+        flat = engine.flatten(stacked)
+        flat, aux = agg(flat, state.aux, t)
+        ev = eval_flat(flat) if eval_flat is not None else flat
+        val_acc, _ = engine.eval_val_fn(engine.unflatten(ev))
+        improved = val_acc > state.best_val
+        val_hist = state.val_hist
+        if hist_len:
+            val_hist = val_hist.at[t % hist_len].set(val_acc)
+        return RoundState(
+            t=t + 1,
+            key=state.key,
+            flat=flat,
+            best_val=jnp.where(improved, val_acc, state.best_val),
+            best_flat=jnp.where(improved[:, None], ev, state.best_flat),
+            val_hist=val_hist,
+            aux=aux)
+
+    return round_step
+
+
+def run_rounds(round_step, state: RoundState, rounds: int,
+               on_flush: Optional[Callable] = None,
+               flush_every: int = 0) -> RoundState:
+    """Dispatch ``rounds`` compiled steps. The loop itself performs no host
+    transfers; ``on_flush(state, done)`` (if given) is invoked every
+    ``flush_every`` rounds and once at the end — the only places a caller
+    should pull history buffers off device."""
+    last = 0
+    for t in range(rounds):
+        state = round_step(state)
+        if flush_every and on_flush is not None and (t + 1) % flush_every \
+                == 0 and t + 1 < rounds:
+            on_flush(state, t + 1 - last)
+            last = t + 1
+    if on_flush is not None and rounds > last:
+        on_flush(state, rounds - last)
+    return state

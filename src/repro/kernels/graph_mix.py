@@ -1,11 +1,11 @@
 """Pallas-TPU kernel for DPFL collaboration-graph aggregation (Eq. 4).
 
-Computes ``out = A @ W`` where A is the (N, N) row-stochastic mixing matrix
-and W the (N, P) client-stacked flattened parameters — the paper's
-aggregation hot-spot (it runs once per round per client, and 4x per GGC
-probe). N is small (clients); P is huge (model size), so we tile P into
-VMEM-sized column panels and keep A resident in VMEM. Accumulation in fp32
-regardless of the parameter dtype.
+Computes ``out = A @ W`` where A is the (M, N) mixing operator — the full
+(N, N) row-stochastic matrix for Eq.-4 aggregation, or a single (1, N)
+mask-weight row for the GGC set-average probes — and W the (N, P)
+client-stacked flattened parameters. M, N are small (clients); P is huge
+(model size), so we tile P into VMEM-sized column panels and keep A
+resident in VMEM. Accumulation in fp32 regardless of the parameter dtype.
 """
 from __future__ import annotations
 
@@ -25,7 +25,8 @@ def _kernel(a_ref, w_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
 def graph_mix(A, W, *, block_p: int = 2048, interpret: bool = False):
-    """A: (N, N); W: (N, P). Returns (N, P) = A @ W."""
+    """A: (M, N); W: (N, P). Returns (M, P) = A @ W."""
+    M = A.shape[0]
     N, P = W.shape
     bp = min(block_p, P)
     pad = (-P) % bp
@@ -35,11 +36,11 @@ def graph_mix(A, W, *, block_p: int = 2048, interpret: bool = False):
         _kernel,
         grid=(Pp // bp,),
         in_specs=[
-            pl.BlockSpec((N, N), lambda i: (0, 0)),       # A resident
+            pl.BlockSpec((M, N), lambda i: (0, 0)),       # A resident
             pl.BlockSpec((N, bp), lambda i: (0, i)),      # panel of W
         ],
-        out_specs=pl.BlockSpec((N, bp), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((N, Pp), W.dtype),
+        out_specs=pl.BlockSpec((M, bp), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((M, Pp), W.dtype),
         interpret=interpret,
     )(A, Wp)
     return out[:, :P] if pad else out

@@ -3,24 +3,27 @@
 A FUNCTION (not a module constant) so importing never touches jax device
 state. The dry-run entrypoint sets XLA_FLAGS for 512 host devices *before*
 any jax import; everything else sees the real (single-CPU) device.
+
+Meshes are built through `repro.sharding.compat.make_mesh`, which absorbs
+the AxisType / axis_types signature drift across jax releases.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from ..sharding.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """1x1 mesh on the real local device(s) — used by smoke tests."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((n, 1), ("data", "model"))
 
 
 # TPU v5e hardware model used by the roofline analysis (per chip).

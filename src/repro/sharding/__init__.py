@@ -1,5 +1,6 @@
+from .compat import abstract_mesh, make_mesh, mesh_axis_sizes
 from .rules import (add_client_axis, batch_specs, cache_specs, named,
                     param_specs)
 
 __all__ = ["param_specs", "batch_specs", "cache_specs", "add_client_axis",
-           "named"]
+           "named", "abstract_mesh", "make_mesh", "mesh_axis_sizes"]

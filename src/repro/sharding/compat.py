@@ -1,0 +1,59 @@
+"""Version-compat constructors for jax mesh APIs.
+
+The mesh surface moved across jax releases: `AbstractMesh` switched from a
+``((name, size), ...)`` shape_tuple to separate ``axis_sizes/axis_names``
+arguments, ``AxisType`` only exists on newer releases, and
+``jax.make_mesh`` grew (then required) an ``axis_types`` kwarg. Every mesh
+in this repo is built through these two helpers so a jax upgrade is a
+one-file audit (ISSUE 1 satellite; DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AbstractMesh
+
+try:  # jax >= 0.4.38
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # older jax: meshes are implicitly 'auto'
+    _AxisType = None
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """`jax.shard_map` across releases: the top-level export (with its
+    ``check_vma`` kwarg) when present, else the experimental one (whose
+    equivalent kwarg is ``check_rep``)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _esm
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _esm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def abstract_mesh(axis_sizes, axis_names) -> AbstractMesh:
+    """AbstractMesh from parallel (sizes, names) tuples, e.g.
+    ``abstract_mesh((16, 16), ("data", "model"))``."""
+    try:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    except TypeError:  # newer signature: (axis_sizes, axis_names)
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+
+
+def make_mesh(axis_sizes, axis_names, **kw):
+    """`jax.make_mesh` with all axes Auto-typed when the running jax
+    supports axis types, and without the kwarg when it does not."""
+    if _AxisType is not None:
+        kw.setdefault("axis_types", (_AxisType.Auto,) * len(axis_names))
+    try:
+        return jax.make_mesh(tuple(axis_sizes), tuple(axis_names), **kw)
+    except TypeError:  # this jax has no axis_types kwarg
+        kw.pop("axis_types", None)
+        return jax.make_mesh(tuple(axis_sizes), tuple(axis_names), **kw)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    """{axis name: size} for Mesh and AbstractMesh across versions."""
+    sizes = getattr(mesh, "axis_sizes", None)
+    if sizes is None:
+        sizes = mesh.devices.shape
+    return dict(zip(mesh.axis_names, sizes))

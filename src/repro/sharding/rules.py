@@ -91,10 +91,8 @@ def param_specs(model, cfg, mesh, example_key=None):
     """PartitionSpec tree matching model.init output structure."""
     import jax.numpy as jnp  # noqa
 
-    sizes = getattr(mesh, "axis_sizes", None)
-    if sizes is None:
-        sizes = mesh.devices.shape
-    model_size = dict(zip(mesh.axis_names, sizes)).get("model", 1)
+    from .compat import mesh_axis_sizes
+    model_size = mesh_axis_sizes(mesh).get("model", 1)
     key = example_key if example_key is not None else jax.random.PRNGKey(0)
     shapes = jax.eval_shape(model.init, key)
 

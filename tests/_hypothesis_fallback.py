@@ -1,0 +1,119 @@
+"""Minimal stand-in for `hypothesis`, used ONLY when the real package is
+not installed (see conftest.py). CI installs the real hypothesis via
+``pip install -e .[dev]``; hermetic environments without it still run the
+property tests as seeded random sweeps with boundary-value examples.
+
+Implements exactly the surface this test-suite uses: ``given``,
+``settings``, ``assume``, and ``strategies.integers / floats /
+sampled_from / booleans``. Shrinking, the example database, and stateful
+testing are intentionally out of scope.
+"""
+from __future__ import annotations
+
+import itertools
+import random
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    """Abort the current example (not the test) when condition is falsy."""
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class _Strategy:
+    """A strategy is a draw(rng) -> value plus optional boundary examples
+    tried before the random sweep (hypothesis-style edge coverage)."""
+
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self.boundary = tuple(boundary)
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         boundary=(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                         boundary=(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements),
+                         boundary=elements[:1])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5,
+                         boundary=(False, True))
+
+
+class settings:
+    """Decorator; only max_examples / deadline / derandomize are honoured
+    (deadline is ignored — there is no timing enforcement here)."""
+
+    def __init__(self, max_examples=100, deadline=None, derandomize=False,
+                 **_ignored):
+        self.max_examples = max_examples
+        self.derandomize = derandomize
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+def given(**strategy_kwargs):
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            # resolved at CALL time: @settings may sit above @given (the
+            # usual order), in which case it decorates this wrapper after
+            # decorate() has already run
+            cfg = (getattr(wrapper, "_fallback_settings", None)
+                   or getattr(fn, "_fallback_settings", None) or settings())
+            names = sorted(strategy_kwargs)
+            strats = [strategy_kwargs[n] for n in names]
+            # deterministic per-test stream: reruns hit the same examples
+            rng = random.Random(fn.__qualname__)
+            # boundary examples first (all-min/all-max style corners) ...
+            corners = list(itertools.islice(
+                itertools.product(*(s.boundary or (None,) for s in strats)),
+                4))
+            examples = [c for c in corners if None not in c]
+            # ... then the random sweep
+            while len(examples) < cfg.max_examples:
+                examples.append(tuple(s.draw(rng) for s in strats))
+            ran = 0
+            for ex in examples[: cfg.max_examples]:
+                drawn = dict(zip(names, ex))
+                try:
+                    fn(*args, **kwargs, **drawn)
+                    ran += 1
+                except UnsatisfiedAssumption:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example {drawn!r}: {e}") from e
+            if ran == 0:
+                raise AssertionError(
+                    "assume() filtered out every generated example")
+
+        # NOT functools.wraps: pytest must see the ()-signature wrapper,
+        # not the strategy parameters (it would resolve them as fixtures)
+        for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+            setattr(wrapper, attr, getattr(fn, attr))
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return decorate

@@ -84,15 +84,16 @@ def test_collectives_counted_with_loop_multiplier():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+from jax.sharding import PartitionSpec as P, NamedSharding
 import sys
 sys.path.insert(0, "src")
 from repro.roofline.hlo import analyze_hlo_text
+from repro.sharding.compat import make_mesh, shard_map
 
-mesh = jax.make_mesh((4,), ("d",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((4,), ("d",))
 def f(x):
     def body(c, _):
-        s = jax.shard_map(lambda a: jax.lax.psum(a, "d"), mesh=mesh,
+        s = shard_map(lambda a: jax.lax.psum(a, "d"), mesh=mesh,
                           in_specs=P("d"), out_specs=P("d"))(c)
         return c + s * 0.1, None
     y, _ = jax.lax.scan(body, x, None, length=5)

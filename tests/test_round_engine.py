@@ -1,0 +1,140 @@
+"""The unified greedy-decision kernel and the compiled round engine:
+(1) `greedy_decision_step` (through all three GGC entry points) must
+reproduce the literal Algorithm-2 oracle selection-for-selection;
+(2) the jitted `round_step` loop must reproduce the original host-driven
+round loop — comm counters, graph history and best-model tracking."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DPFLConfig, run_dpfl, run_dpfl_reference
+from repro.core.graph import (make_bggc, make_ggc, make_ggc_heterogeneous,
+                              make_ggc_naive)
+from repro.data import make_federated_classification
+from repro.fl.engine import FLEngine
+from repro.fl.round_engine import (init_round_state, make_round_step,
+                                   run_rounds)
+from repro.models.classifier import MLP
+
+
+_TOY_N = 6
+
+
+def _toy():
+    key = jax.random.PRNGKey(3)
+    flat_w = jax.random.normal(key, (_TOY_N, 12))
+    p = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1),
+                                  (_TOY_N,))) + 0.1
+    p = p / p.sum()
+    target = jax.random.normal(jax.random.fold_in(key, 2), (12,))
+
+    def reward(fw, k):
+        return -jnp.sum((fw - target) ** 2) - 0.05 * k * jnp.sum(fw ** 2)
+
+    return flat_w, p, reward
+
+
+_TOY = _toy()
+# compile caches across hypothesis examples: the unified kernel compiles
+# ONCE (its budget is traced — the tentpole's point); the literal oracle
+# and the batched BGGC bake the budget in, so one compile per budget.
+_UNIFIED = jax.jit(lambda key, ki, c, w, pp, b: make_ggc_heterogeneous(
+    _TOY[2], _TOY_N)(key, ki, c, w, pp, b))
+_ORACLES, _BGGCS, _GGCS = {}, {}, {}
+
+
+@settings(max_examples=6, deadline=None)
+@given(budget=st.integers(1, 5), seed=st.integers(0, 1000))
+def test_unified_kernel_matches_naive_all_variants(budget, seed):
+    """Property: for any (budget, seed), the shared decision kernel —
+    exercised as static-budget GGC, batched BGGC, and traced-budget
+    heterogeneous GGC — selects exactly what the recompute-from-scratch
+    Algorithm-2 oracle selects (Theorem 1 by construction)."""
+    flat_w, p, reward = _TOY
+    if budget not in _ORACLES:
+        _ORACLES[budget] = jax.jit(make_ggc_naive(reward, budget))
+        _GGCS[budget] = jax.jit(make_ggc(reward, budget))
+        _BGGCS[budget] = jax.jit(make_bggc(reward, budget))
+    for k in range(_TOY_N):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 7), k)
+        cand = jnp.ones(_TOY_N, bool)
+        want = np.asarray(_ORACLES[budget](key, jnp.int32(k), cand,
+                                           flat_w, p))
+        for name, got in [
+                ("ggc", _GGCS[budget](key, jnp.int32(k), cand, flat_w, p)),
+                ("bggc", _BGGCS[budget](key, jnp.int32(k), cand, flat_w, p)),
+                ("heterogeneous", _UNIFIED(key, jnp.int32(k), cand, flat_w,
+                                           p, jnp.int32(budget)))]:
+            np.testing.assert_array_equal(np.asarray(got), want,
+                                          err_msg=name)
+
+
+@pytest.fixture(scope="module")
+def small_setting():
+    data = make_federated_classification(
+        seed=5, n_clients=6, n_clusters=2, partition="pathological",
+        classes_per_client=3, feature_dim=8, n_train=16, n_val=16,
+        n_test=16, noise=2.0, assign_level="cluster")
+    return FLEngine(MLP(8, 16, 10), data, lr=0.05, batch_size=8)
+
+
+@pytest.mark.parametrize("refresh_period", [1, 2])
+def test_round_step_comm_matches_host_loop(small_setting, refresh_period):
+    """Regression: the device-side comm counters of the compiled round
+    loop equal the old python-loop host accounting, round for round."""
+    eng = small_setting
+    cfg = DPFLConfig(rounds=4, tau_init=2, tau_train=1, budget=3, seed=0,
+                     refresh_period=refresh_period)
+    new = run_dpfl(eng, cfg)
+    ref = run_dpfl_reference(eng, cfg)
+    assert new.comm_downloads == ref.comm_downloads
+    assert new.comm_preprocess == ref.comm_preprocess
+    for a, b in zip(new.graph_history, ref.graph_history):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(new.val_acc_history, ref.val_acc_history):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+    np.testing.assert_allclose(new.test_acc, ref.test_acc, atol=1e-6)
+
+
+def test_no_history_run_is_device_resident(small_setting):
+    """track_history=False: same counters/accuracy, nothing accumulated
+    on the host during the loop."""
+    eng = small_setting
+    kw = dict(rounds=4, tau_init=2, tau_train=1, budget=3, seed=0)
+    full = run_dpfl(eng, DPFLConfig(**kw))
+    lean = run_dpfl(eng, DPFLConfig(**kw, track_history=False))
+    assert lean.comm_downloads == full.comm_downloads
+    np.testing.assert_allclose(lean.test_acc, full.test_acc, atol=1e-6)
+    assert lean.val_acc_history == [] and lean.graph_history == []
+
+
+def test_history_chunked_flush_equals_oneshot(small_setting):
+    """history_every=K (bounded device buffers, periodic pulls) must
+    reconstruct the same per-round history as the one-shot pull."""
+    eng = small_setting
+    kw = dict(rounds=5, tau_init=2, tau_train=1, budget=3, seed=0)
+    one = run_dpfl(eng, DPFLConfig(**kw))
+    chunked = run_dpfl(eng, DPFLConfig(**kw, history_every=2))
+    assert len(chunked.graph_history) == 5
+    for a, b in zip(one.graph_history, chunked.graph_history):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(one.val_acc_history, chunked.val_acc_history):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_generic_round_engine_local_only(small_setting):
+    """The baselines' engine path: a local-only round_step tracks the
+    best-on-validation model and advances the device-side round counter."""
+    eng = small_setting
+    key = jax.random.PRNGKey(0)
+    flat0 = eng.flatten(eng.init_clients(key))
+    step = make_round_step(eng, tau=1)
+    state = run_rounds(step, init_round_state(flat0, key), 3)
+    assert int(state.t) == 3
+    assert state.flat.shape == flat0.shape
+    assert bool(jnp.all(jnp.isfinite(state.best_val)))
+    # best_val is the running max of the (recorded) evaluations
+    acc, _ = eng.eval_val_fn(eng.unflatten(state.best_flat))
+    assert bool(jnp.all(acc <= state.best_val + 1e-6))

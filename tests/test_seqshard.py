@@ -13,11 +13,11 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys; sys.path.insert(0, "src")
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.configs import REGISTRY
 from repro.models import build_model
+from repro.sharding.compat import make_mesh
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 for arch in ["qwen3-0.6b", "h2o-danube-1.8b"]:
     cfg = REGISTRY[arch].reduced()
     m_ref = build_model(cfg)

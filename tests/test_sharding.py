@@ -5,17 +5,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_IDS, REGISTRY
 from repro.models import build_model
+from repro.sharding.compat import abstract_mesh
 from repro.sharding.rules import add_client_axis, cache_specs, param_specs
 
 MESH_SIZES = {"data": 16, "model": 16, "pod": 2}
 
 
 def _mesh():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def _check_divisible(spec_tree, shape_tree, what):
