@@ -1,7 +1,16 @@
 """GGC complexity claim (§3.2): per-client cost is O(B_c) reward probes
 during training (candidates come from Omega_k, |Omega_k| <= B_c), and O(N)
 compute / O(B_c) communication for BGGC preprocessing. We measure wall time
-of the vmapped graph build vs N and B_c."""
+of the vmapped graph build vs N and B_c.
+
+`python -m benchmarks.bench_ggc_scaling --mesh` measures the shard_map
+graph build (each shard vmaps only its local k rows against all-gathered
+peer panels) vs forced host device count — one subprocess per count, since
+--xla_force_host_platform_device_count must precede the jax import."""
+import argparse
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -14,6 +23,8 @@ from repro.fl.engine import FLEngine
 from repro.models.classifier import MLP
 
 from .common import Bench
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def run(bench: Bench):
@@ -47,3 +58,83 @@ def run(bench: Bench):
             bench.record(f"ggc_scaling/N={n_clients}/B={budget}",
                          time.time() - t0,
                          f"edges={int(np.asarray(adj).sum())}")
+
+
+def _mesh_worker(n_clients, budget, devices, repeats=3):
+    """Subprocess body of --mesh: time the shard_map graph build on THIS
+    process's forced host devices; prints one CSV row."""
+    from repro.launch.mesh import make_client_mesh
+
+    assert len(jax.devices()) == devices
+    data = make_federated_classification(
+        seed=0, n_clients=n_clients, n_clusters=4, feature_dim=16,
+        n_train=16, n_val=16, n_test=16, noise=2.0, assign_level="cluster")
+    eng = FLEngine(MLP(16, 32, 10), data, lr=0.05, batch_size=8)
+    mesh = make_client_mesh(devices) if devices > 1 else None
+    if mesh is not None:
+        eng.shard_clients(mesh)
+    flat = eng.flatten(eng.init_clients(jax.random.PRNGKey(0)))
+    reward = eng.make_reward_fn()
+    cand = jnp.ones((n_clients, n_clients), bool)
+    jf = jax.jit(lambda k, f: all_clients_graph(
+        k, f, eng.p, cand, reward, budget, mesh=mesh,
+        client_axes=eng.client_axes))
+    key = jax.random.PRNGKey(1)
+    jax.block_until_ready(jf(key, flat))  # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.time()
+        jax.block_until_ready(jf(key, flat))
+        best = min(best, time.time() - t0)
+    print(f"ggc_mesh,N={n_clients},B={budget},devices={devices},"
+          f"{best * 1e3:.1f}ms")
+
+
+def _mesh_parent(n_clients, budget, device_counts):
+    print("tag,N,B,devices,build_ms")
+    for d in device_counts:
+        if n_clients % d:
+            print(f"ggc_mesh,N={n_clients},B={budget},devices={d},skip")
+            continue
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(ROOT, "src"),
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={d}")
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_ggc_scaling",
+             "--mesh-worker", "--devices", str(d),
+             "--clients", str(n_clients), "--budget", str(budget)],
+            cwd=ROOT, env=env, capture_output=True, text=True,
+            timeout=2400)
+        out = [ln for ln in r.stdout.splitlines()
+               if ln.startswith("ggc_mesh,")]
+        if r.returncode or not out:
+            print(f"ggc_mesh,N={n_clients},B={budget},devices={d},failed")
+            sys.stderr.write(r.stdout[-2000:] + r.stderr[-2000:])
+            continue
+        print(out[-1])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard_map graph build vs forced device count")
+    ap.add_argument("--mesh-worker", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--budget", type=int, default=4)
+    ap.add_argument("--device-counts", default="1,2,4,8")
+    args = ap.parse_args()
+    if args.mesh_worker:
+        _mesh_worker(args.clients, args.budget, args.devices)
+    elif args.mesh:
+        counts = tuple(int(d) for d in args.device_counts.split(","))
+        _mesh_parent(args.clients, args.budget, counts)
+    else:
+        bench = Bench()
+        run(bench)
+        bench.print_csv()
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,11 @@ Pairs (chosen from the baseline table; rationale in EXPERIMENTS.md §Perf):
 host-driven python loop (`run_dpfl_reference`, per-round dispatches +
 np.asarray comm syncs) vs the compiled device-resident round engine
 (`run_dpfl`, one jitted round_step) — the ISSUE-1 tentpole win.
+
+--dpfl --mesh benchmarks the mesh-sharded engine: rounds/sec of the SAME
+compiled round_step with the client axis sharded over 1/2/4/8 forced host
+devices (each count runs in a subprocess so XLA_FLAGS lands before the
+jax import) — the ISSUE-2 tentpole scaling mode.
 """
 import argparse
 import json
@@ -95,16 +100,92 @@ def bench_dpfl_rounds(rounds=10, n_clients=16, repeats=2):
     print(f"dpfl,speedup,ok,,{new / ref:.2f}x,,,,")
 
 
+def bench_dpfl_mesh_worker(rounds, n_clients, devices, repeats=2):
+    """Subprocess body of --dpfl --mesh: run_dpfl on the client-sharded
+    engine over the forced host devices of THIS process; prints one CSV
+    row. Preprocessing is excluded like bench_dpfl_rounds."""
+    import time as _time
+
+    import jax
+
+    from benchmarks.common import standard_setting
+    from repro.core import DPFLConfig, run_dpfl
+    from repro.launch.mesh import make_client_mesh
+
+    assert len(jax.devices()) == devices, \
+        f"expected {devices} forced host devices, got {len(jax.devices())}"
+    _, _, engine = standard_setting(n_clients=n_clients)
+    if devices > 1:
+        engine.shard_clients(make_client_mesh(devices))
+    kw = dict(tau_init=2, tau_train=2, budget=4, seed=0,
+              track_history=False)
+    run_dpfl(engine, DPFLConfig(rounds=1, **kw))  # warm up compiles
+    t0 = _time.perf_counter()
+    run_dpfl(engine, DPFLConfig(rounds=0, **kw))
+    pre = _time.perf_counter() - t0
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = _time.perf_counter()
+        run_dpfl(engine, DPFLConfig(rounds=rounds, **kw))
+        best = min(best, _time.perf_counter() - t0 - pre)
+    print(f"dpfl_mesh,devices={devices},ok,{best:.3f},"
+          f"{rounds / best:.3f},,,,")
+
+
+def bench_dpfl_mesh(rounds=10, n_clients=16, device_counts=(1, 2, 4, 8)):
+    """rounds/sec of the mesh-sharded round engine vs device count. Each
+    count runs in a subprocess because --xla_force_host_platform_device_count
+    must be set before jax imports."""
+    print("pair,tag,status,loop_s,rounds_per_s,,,,")
+    for d in device_counts:
+        if n_clients % d:
+            print(f"dpfl_mesh,devices={d},skip(n_clients%d),,,,,,")
+            continue
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(ROOT, "src"),
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={d}")
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.perf_hillclimb",
+             "--dpfl-mesh-worker", "--devices", str(d),
+             "--rounds", str(rounds), "--clients", str(n_clients)],
+            cwd=ROOT, env=env, capture_output=True, text=True,
+            timeout=2400)
+        out = [ln for ln in r.stdout.splitlines()
+               if ln.startswith("dpfl_mesh,")]
+        if r.returncode or not out:
+            print(f"dpfl_mesh,devices={d},failed,,,,,,")
+            sys.stderr.write(r.stdout[-2000:] + r.stderr[-2000:])
+            continue
+        print(out[-1])
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pair", default="")
     ap.add_argument("--dpfl", action="store_true",
                     help="benchmark DPFL rounds/sec old-vs-new round loop")
+    ap.add_argument("--mesh", action="store_true",
+                    help="with --dpfl: rounds/sec of the client-sharded "
+                         "engine vs forced host device count")
+    ap.add_argument("--device-counts", default="1,2,4,8",
+                    help="comma-separated device counts for --mesh")
+    ap.add_argument("--dpfl-mesh-worker", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--devices", type=int, default=1,
+                    help=argparse.SUPPRESS)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--clients", type=int, default=16)
     args = ap.parse_args()
+    if args.dpfl_mesh_worker:
+        bench_dpfl_mesh_worker(args.rounds, args.clients, args.devices)
+        return
     if args.dpfl:
-        bench_dpfl_rounds(rounds=args.rounds, n_clients=args.clients)
+        if args.mesh:
+            counts = tuple(int(d) for d in args.device_counts.split(","))
+            bench_dpfl_mesh(rounds=args.rounds, n_clients=args.clients,
+                            device_counts=counts)
+        else:
+            bench_dpfl_rounds(rounds=args.rounds, n_clients=args.clients)
         return
     os.makedirs(OUT, exist_ok=True)
     print("pair,tag,status,compute_s,memory_s,collective_s,dominant,"

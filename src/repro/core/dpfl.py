@@ -14,6 +14,13 @@ device buffers pulled off device only at the end (or every
 ``cfg.history_every`` rounds). ``run_dpfl_reference`` keeps the original
 host-driven python loop as the equivalence/perf baseline
 (`benchmarks/perf_hillclimb.py --dpfl` reports rounds/sec for both).
+
+When the engine carries a mesh (`FLEngine.shard_clients`), the same
+round_step runs SPMD with the client axis sharded over ('pod', 'data'):
+local train/eval stay shard-local and the Eq.-4 mix plus GGC refresh are
+the only cross-client collectives (`--mesh` modes of
+`benchmarks/perf_hillclimb.py` and `benchmarks/bench_ggc_scaling.py`
+report rounds/sec and graph-build time vs device count).
 """
 from __future__ import annotations
 
@@ -23,10 +30,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as PSpec
 
 from ..fl.engine import FLEngine
-from ..fl.round_engine import init_round_state, make_round_step, run_rounds
-from .graph import all_clients_graph, make_bggc, mixing_matrix, mix_flat
+from ..fl.round_engine import (RoundState, init_round_state, make_round_step,
+                               run_rounds, shard_round_state)
+from .graph import (all_clients_bggc, all_clients_graph, mixing_matrix,
+                    mix_flat)
 
 
 @dataclass
@@ -53,8 +63,10 @@ class DPFLResult:
     omega: Optional[np.ndarray] = None
     best_flat: Optional[np.ndarray] = None  # (N, P) best-val client models
     # communication accounting (models downloaded, the paper's cost unit):
-    # preprocessing BGGC = N-1 per client; each training round = |Omega_k|
-    # when GGC refreshes (needs all candidates) else |C_k| (aggregation only)
+    # preprocessing BGGC = N-1 per client (streams every peer), but the
+    # random-graph (Fig. 3) ablation only downloads its `budget` sampled
+    # peers; each training round = |Omega_k| when GGC refreshes (needs all
+    # candidates) else |C_k| (aggregation only)
     comm_downloads: list = field(default_factory=list)  # per-round totals
     comm_preprocess: int = 0
 
@@ -70,6 +82,37 @@ def _symmetry(adj: np.ndarray) -> float:
     np.fill_diagonal(a, False)
     denom = a.sum()
     return float((a & a.T).sum() / denom) if denom else 1.0
+
+
+def _comm_preprocess(cfg: DPFLConfig, N: int, budget: int) -> int:
+    """Models downloaded during preprocessing: BGGC streams every peer
+    (N-1 per client); the random-graph (Fig. 3) ablation only downloads
+    the `budget` sampled peers of each client."""
+    if cfg.random_graph:
+        return N * min(budget, N - 1)
+    return N * (N - 1)
+
+
+def _cached_bggc(engine: FLEngine, cfg: DPFLConfig, reward_fn, budget: int):
+    """Fetch-or-build the jitted all-clients BGGC preprocessing. The old
+    path ran N eager un-jitted `bggc` calls in a python loop — N separate
+    traces per run; this compiles the vmapped program ONCE per (budget,
+    mix_impl, mesh) and memoizes it on the engine (selections are
+    bitwise-identical to the loop; tested)."""
+    cache = getattr(engine, "_bggc_cache", None)
+    if cache is None:
+        cache = engine._bggc_cache = {}
+    key = (budget, cfg.mix_impl, engine.mesh, engine.client_axes)
+    if key not in cache:
+        mesh, ca = engine.mesh, engine.client_axes
+
+        def build(k_graph, flat, cand, p):
+            return all_clients_bggc(k_graph, flat, p, cand, reward_fn,
+                                    budget, mix_impl=cfg.mix_impl,
+                                    mesh=mesh, client_axes=ca)
+
+        cache[key] = jax.jit(build)
+    return cache[key]
 
 
 def _preprocess(engine: FLEngine, cfg: DPFLConfig, reward_fn, budget: int):
@@ -99,15 +142,14 @@ def _preprocess(engine: FLEngine, cfg: DPFLConfig, reward_fn, budget: int):
             omega[k_, k_] = True
         omega = jnp.asarray(omega)
     else:
-        # BGGC: batched preprocessing within the communication budget
-        bggc = make_bggc(reward_fn, budget, mix_impl=cfg.mix_impl)
-        keys = [jax.random.fold_in(k_graph, i) for i in range(N)]
-        omega = jnp.stack([
-            bggc(keys[k_], jnp.int32(k_), full_mask[k_], flat, p)
-            for k_ in range(N)])
+        # BGGC: batched preprocessing within the communication budget,
+        # compiled once for all clients (vmapped; sharded under a mesh)
+        omega = _cached_bggc(engine, cfg, reward_fn, budget)(
+            k_graph, flat, full_mask, p)
 
     A = mixing_matrix(omega, p)
-    flat = mix_flat(A, flat, impl=cfg.mix_impl)
+    flat = mix_flat(A, flat, impl=cfg.mix_impl, mesh=engine.mesh,
+                    client_axes=engine.client_axes)
     return omega, flat, k_graph, k_train
 
 
@@ -117,8 +159,11 @@ def _make_dpfl_aggregate(engine: FLEngine, cfg: DPFLConfig, reward_fn,
     refresh (Alg. 1 line 9, every cfg.refresh_period rounds), Eq.-4 mixing,
     and device-side comm-download accounting. Omega and the graph PRNG key
     are read from ``aux`` (not closed over), so the compiled step is
-    reusable across runs."""
+    reusable across runs. Under a client mesh, the GGC refresh and the
+    Eq.-4 mix run their shard_map paths — the round's only cross-client
+    collectives."""
     p = engine.p
+    mesh, ca = engine.mesh, engine.client_axes
 
     def aggregate(flat, aux, t):
         adj = aux["adj"]
@@ -137,11 +182,12 @@ def _make_dpfl_aggregate(engine: FLEngine, cfg: DPFLConfig, reward_fn,
                 lambda f: all_clients_graph(
                     jax.random.fold_in(aux["k_graph"], 1000 + t), f, p,
                     omega, reward_fn, budget, impl=cfg.graph_impl,
-                    mix_impl=cfg.mix_impl),
+                    mix_impl=cfg.mix_impl, mesh=mesh, client_axes=ca),
                 lambda f: adj,
                 flat)
         A = mixing_matrix(new_adj, p)
-        mixed = mix_flat(A, flat, impl=cfg.mix_impl)
+        mixed = mix_flat(A, flat, impl=cfg.mix_impl, mesh=mesh,
+                         client_axes=ca)
         aux = dict(aux, adj=new_adj,
                    comm=aux["comm"].at[t].set(comm_t.astype(jnp.int32)))
         if hist_len:
@@ -152,24 +198,41 @@ def _make_dpfl_aggregate(engine: FLEngine, cfg: DPFLConfig, reward_fn,
     return aggregate
 
 
+def _dpfl_aux_specs(engine: FLEngine, hist_len: int):
+    """PartitionSpecs for the DPFL aux pytree on the client mesh: the
+    adjacency, Omega and graph history shard their client-row axis; the
+    graph key and comm counters replicate."""
+    if engine.mesh is None:
+        return None
+    ca = tuple(engine.client_axes)
+    specs = {"adj": PSpec(ca, None), "omega": PSpec(ca, None),
+             "k_graph": PSpec(), "comm": PSpec()}
+    if hist_len:
+        specs["graph_hist"] = PSpec(None, ca, None)
+    return specs
+
+
 def _cached_round_step(engine: FLEngine, cfg: DPFLConfig, budget: int,
                        hist_len: int):
     """Fetch-or-build the compiled DPFL round_step. Memoized on the engine
-    keyed by the static knobs; every run-varying array rides in RoundState,
-    so repeated runs (sweeps, benchmarks, serving refreshes) reuse the
-    compiled executable with zero retracing."""
+    keyed by the static knobs (incl. the client mesh); every run-varying
+    array rides in RoundState, so repeated runs (sweeps, benchmarks,
+    serving refreshes) reuse the compiled executable with zero retracing."""
     cache = getattr(engine, "_dpfl_round_step_cache", None)
     if cache is None:
         cache = engine._dpfl_round_step_cache = {}
     key = (cfg.tau_train, cfg.refresh_period, cfg.random_graph,
-           cfg.graph_impl, cfg.mix_impl, budget, hist_len)
+           cfg.graph_impl, cfg.mix_impl, budget, hist_len, engine.mesh,
+           engine.client_axes)
     if key not in cache:
         reward_fn = engine.make_reward_fn()
         aggregate = _make_dpfl_aggregate(engine, cfg, reward_fn, budget,
                                          hist_len)
         cache[key] = make_round_step(engine, tau=cfg.tau_train,
                                      aggregate=aggregate,
-                                     hist_len=hist_len)
+                                     hist_len=hist_len,
+                                     aux_specs=_dpfl_aux_specs(engine,
+                                                               hist_len))
     return cache[key]
 
 
@@ -183,20 +246,22 @@ def run_dpfl(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
     omega, flat, k_graph, k_train = _preprocess(engine, cfg, reward_fn,
                                                 budget)
     result = DPFLResult(test_acc=None, omega=np.asarray(omega))
-    result.comm_preprocess = N * (N - 1)  # BGGC streams all peers (batched)
+    result.comm_preprocess = _comm_preprocess(cfg, N, budget)
 
     # ---- training loop (Alg. 1 lines 6-12): one compiled round_step
-    if cfg.track_history:
-        hist_len = (min(cfg.history_every, cfg.rounds)
-                    if cfg.history_every else cfg.rounds)
-    else:
-        hist_len = 0
+    hist_len = _hist_len(cfg)
     aux = {"adj": omega, "omega": omega, "k_graph": k_graph,
            "comm": jnp.zeros((cfg.rounds,), jnp.int32)}
     if hist_len:
         aux["graph_hist"] = jnp.zeros((hist_len, N, N), bool)
     round_step = _cached_round_step(engine, cfg, budget, hist_len)
     state = init_round_state(flat, k_train, hist_len=hist_len, aux=aux)
+    if engine.mesh is not None:
+        # the jit's in_shardings cannot re-lay-out committed arrays, so
+        # place the initial state on the client mesh explicitly
+        state = shard_round_state(state, engine.mesh, engine.client_axes,
+                                  aux_specs=_dpfl_aux_specs(engine,
+                                                            hist_len))
 
     def flush_histories(st, k):
         # the ONLY host transfers: every hist_len rounds + once at the end
@@ -232,7 +297,7 @@ def run_dpfl_reference(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
     best_val = jnp.full((N,), -jnp.inf)
     best_flat = engine.flatten(stacked)
     result = DPFLResult(test_acc=None, omega=np.asarray(omega))
-    result.comm_preprocess = N * (N - 1)
+    result.comm_preprocess = _comm_preprocess(cfg, N, budget)
     adj = omega
 
     for t in range(cfg.rounds):
@@ -269,6 +334,46 @@ def run_dpfl_reference(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
     result.test_acc = np.asarray(test_acc)
     result.best_flat = np.asarray(best_flat)
     return result
+
+
+def dpfl_round_step(engine: FLEngine, cfg: DPFLConfig):
+    """The compiled/cached DPFL ``round_step`` for (engine, cfg) — the
+    exact program `run_dpfl` dispatches each round. Public so dry-run and
+    benchmark harnesses lower/compile the SAME code path instead of
+    reimplementing a round (launch/fl_dryrun.py)."""
+    N = engine.data.n_clients
+    budget = cfg.budget if cfg.budget is not None else N - 1
+    hist_len = _hist_len(cfg)
+    return _cached_round_step(engine, cfg, budget, hist_len)
+
+
+def abstract_round_state(engine: FLEngine, cfg: DPFLConfig) -> RoundState:
+    """ShapeDtypeStruct skeleton of the DPFL RoundState — lets callers
+    ``dpfl_round_step(...).lower(abstract_round_state(...))`` without
+    running preprocessing (the 512-device dry-run)."""
+    N = engine.data.n_clients
+    P_ = engine.n_params
+    hist_len = _hist_len(cfg)
+    key_t = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+
+    def sds(shape, dt=jnp.float32):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    aux = {"adj": sds((N, N), jnp.bool_), "omega": sds((N, N), jnp.bool_),
+           "k_graph": key_t, "comm": sds((cfg.rounds,), jnp.int32)}
+    if hist_len:
+        aux["graph_hist"] = sds((hist_len, N, N), jnp.bool_)
+    return RoundState(
+        t=sds((), jnp.int32), key=key_t, flat=sds((N, P_)),
+        best_val=sds((N,)), best_flat=sds((N, P_)),
+        val_hist=sds((hist_len, N)) if hist_len else None, aux=aux)
+
+
+def _hist_len(cfg: DPFLConfig) -> int:
+    if not cfg.track_history:
+        return 0
+    return (min(cfg.history_every, cfg.rounds)
+            if cfg.history_every else cfg.rounds)
 
 
 def graph_stats(result: DPFLResult) -> dict:

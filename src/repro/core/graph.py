@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops as _kops
+from ..sharding.compat import optimization_barrier as _barrier
 
 
 # ------------------------------------------------------------------ mixing
@@ -54,14 +55,18 @@ def mix_pytree(A, stacked_params):
         stacked_params)
 
 
-def mix_flat(A, flat_w, mix_fn=None, *, impl: Optional[str] = None):
+def mix_flat(A, flat_w, mix_fn=None, *, impl: Optional[str] = None,
+             mesh=None, client_axes=None):
     """(N, P) client-stacked flattened params through the Eq.-4 mixing
     matmul. Dispatches to `kernels.ops.graph_mix` (Pallas on TPU, fp32
     reference elsewhere); ``impl`` pins an implementation, ``mix_fn``
-    overrides the whole op (legacy hook)."""
+    overrides the whole op (legacy hook). ``mesh``/``client_axes`` select
+    the shard_map row-block path (each client shard gathers the peer
+    panels it mixes with — DESIGN.md §8)."""
     if mix_fn is not None:
         return mix_fn(A, flat_w)
-    return _kops.graph_mix(A, flat_w, impl=impl)
+    return _kops.graph_mix(A, flat_w, impl=impl, mesh=mesh,
+                           client_axes=client_axes)
 
 
 def weighted_sum(mask_p, flat_w, *, impl: Optional[str] = None):
@@ -106,14 +111,18 @@ def greedy_decision_step(reward_fn: Callable):
         maskX, maskY, wX, wY, pX, pY, nsel = carry
         is_cand = cand_mask[j]
         p_j = p[j]
-        # four reward probes, batched into one vmapped forward
-        probes = jnp.stack([
+        # four reward probes, batched into one vmapped forward; barriers
+        # pin the probe/reward fusion boundary so the decision stream does
+        # not additionally depend on what surrounds the kernel (compiled
+        # round vs host loop vs shard_map block) — fp noise here feeds the
+        # a/(a+b) coin flips, which near-zero gains amplify (DESIGN.md §8)
+        probes = _barrier(jnp.stack([
             wX / pX,
             (wX + p_j * w_j) / (pX + p_j),
             wY / pY,
             (wY - p_j * w_j) / jnp.maximum(pY - p_j, 1e-12),
-        ])
-        r = jax.vmap(lambda fw: reward_fn(fw, k_idx))(probes)
+        ]))
+        r = _barrier(jax.vmap(lambda fw: reward_fn(fw, k_idx))(probes))
         a = jnp.maximum(r[1] - r[0], 0.0)
         b = jnp.maximum(r[3] - r[2], 0.0)
         prob = jnp.where(a + b > 0, a / (a + b), 1.0)
@@ -287,19 +296,75 @@ def make_ggc_heterogeneous(reward_fn: Callable, max_budget: int, *,
     return ggc
 
 
+def _shard_clients_graph(per_client, mesh, client_axes, keys, ks,
+                         cand_masks, flat_w, p):
+    """shard_map a vmapped per-client graph builder over the client mesh
+    axes: each shard all-gathers the peer parameter panels once, then
+    vmaps ``per_client`` over only its shard-local k rows — the GGC
+    reward probes and greedy decisions stay shard-local (DESIGN.md §8)."""
+    from jax.sharding import PartitionSpec as P
+
+    from ..sharding.compat import shard_map
+
+    ca = tuple(client_axes)
+
+    def block(keys_blk, k_blk, cand_blk, w_blk, p_full):
+        # materialize the gathered peer panels before the probes so the
+        # gather cannot fuse into the reward matmuls (keeps the per-shard
+        # probe numerics as close to the single-device build as XLA
+        # allows — see DESIGN.md §8 on greedy-decision fp sensitivity)
+        w_full = _barrier(
+            jax.lax.all_gather(w_blk, ca, axis=0, tiled=True))
+        return jax.vmap(per_client, in_axes=(0, 0, 0, None, None))(
+            keys_blk, k_blk, cand_blk, w_full, p_full)
+
+    # check_vma=False: the probes may dispatch to the Pallas graph_mix
+    # kernel, which has no shard_map replication rule
+    return shard_map(
+        block, mesh=mesh,
+        in_specs=(P(ca, None), P(ca), P(ca, None), P(ca, None), P(None)),
+        out_specs=P(ca, None), check_vma=False)(keys, ks, cand_masks,
+                                                flat_w, p)
+
+
 def all_clients_graph(key, flat_w, p, cand_masks, reward_fn, budget,
-                      impl: str = "ggc", mix_impl: Optional[str] = None):
+                      impl: str = "ggc", mix_impl: Optional[str] = None,
+                      mesh=None, client_axes=None):
     """Run graph construction for every client (vmap over k).
 
     cand_masks: (N, N) bool, row k = Omega_k. Returns adjacency (N, N) bool
-    with adj[k, i]=1 iff i selected for k (diag True)."""
+    with adj[k, i]=1 iff i selected for k (diag True). With
+    ``mesh``/``client_axes`` the vmap covers only the shard-local k rows
+    inside a shard_map (adjacency rows come back client-sharded)."""
     N = flat_w.shape[0]
     if impl == "naive":
         ggc = make_ggc_naive(reward_fn, budget)
     else:
         ggc = make_ggc(reward_fn, budget, mix_impl=mix_impl)
     keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(N))
+    if mesh is not None:
+        return _shard_clients_graph(ggc, mesh, client_axes, keys,
+                                    jnp.arange(N), cand_masks, flat_w, p)
     return jax.vmap(ggc, in_axes=(0, 0, 0, None, None))(
+        keys, jnp.arange(N), cand_masks, flat_w, p)
+
+
+def all_clients_bggc(key, flat_w, p, cand_masks, reward_fn, budget,
+                     mix_impl: Optional[str] = None,
+                     mesh=None, client_axes=None):
+    """Batched-GGC preprocessing for every client as ONE traced program
+    (vmap over k; the Algorithm-3 batch phases unroll at trace time), in
+    place of N eager per-client `bggc` calls — jit the result once and
+    every run reuses the compile. Selections are bitwise-identical to the
+    sequential loop (same fold_in(key, k) streams; tested). With
+    ``mesh``/``client_axes``, the vmap covers only shard-local k rows."""
+    N = flat_w.shape[0]
+    bggc = make_bggc(reward_fn, budget, mix_impl=mix_impl)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(N))
+    if mesh is not None:
+        return _shard_clients_graph(bggc, mesh, client_axes, keys,
+                                    jnp.arange(N), cand_masks, flat_w, p)
+    return jax.vmap(bggc, in_axes=(0, 0, 0, None, None))(
         keys, jnp.arange(N), cand_masks, flat_w, p)
 
 

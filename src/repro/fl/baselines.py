@@ -2,6 +2,12 @@
 engine. Each returns a dict with per-client test accuracy of the
 best-on-validation models (the paper's evaluation protocol).
 
+Every method's round loop — including APFL and Ditto, whose personal /
+global side models ride in the engine's ``aux`` pytree — runs on the
+compiled device-resident `round_step` (`_loop`), so no baseline performs
+per-round host transfers or per-round dispatch of separately-jitted
+pieces.
+
 Simplifications vs original papers are noted inline and in DESIGN.md; every
 method keeps its defining mechanism:
   Local, FedAvg, FedAvg+FT, FedProx(+FT), APFL, PerFedAvg (FO-MAML),
@@ -15,21 +21,17 @@ from typing import Callable, Dict
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from ..core.graph import mix_flat, mixing_matrix
 from .engine import FLEngine
-from .round_engine import init_round_state, make_round_step, run_rounds
+from .round_engine import (init_round_state, make_round_step, run_rounds,
+                           shard_round_state)
 
 
 def _global_avg(flat, p):
     g = jnp.einsum("n,np->p", p, flat)
     return jnp.broadcast_to(g[None], flat.shape)
-
-
-def _track_best(best_val, best_flat, val_acc, flat):
-    improved = val_acc > best_val
-    return (jnp.where(improved, val_acc, best_val),
-            jnp.where(improved[:, None], flat, best_flat))
 
 
 def _finish(engine, best_flat):
@@ -39,35 +41,49 @@ def _finish(engine, best_flat):
 
 
 def _loop(engine, rounds, tau, seed, aggregate, *, local_train=None,
-          eval_flat=None, cache_key=None):
+          eval_flat=None, cache_key=None, make_aux=None, aux_specs=None):
     """Generic round loop: local train -> aggregate -> track best-val.
 
     Runs on the compiled round engine: the whole round (including the
     ``aggregate`` callback, which must be jax-traceable) is one jitted
     ``round_step`` and the loop performs no per-round host transfers.
+    Methods with side models (APFL's personal branch, Ditto's personal
+    prox models) carry them in ``aux`` via ``make_aux(flat0, key)``;
+    ``eval_flat(flat, aux)`` selects the evaluated/tracked model.
 
     ``cache_key`` (a hashable tuple naming the method + its closure
     hyperparameters) memoizes the compiled round_step on the engine —
     passing it asserts that ``aggregate``/``local_train``/``eval_flat``
     compute the same function for the same (engine, tau, cache_key), so
-    repeated baseline runs and sweeps skip recompilation."""
+    repeated baseline runs and sweeps skip recompilation. Under a client
+    mesh (`engine.shard_clients`), ``aux_specs`` places the aux leaves and
+    the round_step jit carries the client-axis shardings."""
     key = jax.random.PRNGKey(seed)
     stacked = engine.init_clients(key)
+    flat0 = engine.flatten(stacked)
+    aux = make_aux(flat0, key) if make_aux is not None else {}
+    if aux_specs is None:  # default: every aux leaf replicates
+        aux_specs = jax.tree.map(lambda _: P(), aux)
     if cache_key is None:
         round_step = make_round_step(engine, tau=tau, aggregate=aggregate,
                                      local_train=local_train,
-                                     eval_flat=eval_flat)
+                                     eval_flat=eval_flat,
+                                     aux_specs=aux_specs)
     else:
         cache = getattr(engine, "_baseline_step_cache", None)
         if cache is None:
             cache = engine._baseline_step_cache = {}
-        k = (tau,) + tuple(cache_key)
+        k = (tau, engine.mesh, engine.client_axes) + tuple(cache_key)
         if k not in cache:
             cache[k] = make_round_step(engine, tau=tau, aggregate=aggregate,
                                        local_train=local_train,
-                                       eval_flat=eval_flat)
+                                       eval_flat=eval_flat,
+                                       aux_specs=aux_specs)
         round_step = cache[k]
-    state = init_round_state(engine.flatten(stacked), key, aux={})
+    state = init_round_state(flat0, key, aux=aux)
+    if engine.mesh is not None:
+        state = shard_round_state(state, engine.mesh, engine.client_axes,
+                                  aux_specs=aux_specs)
     state = run_rounds(round_step, state, rounds)
     return state.best_flat, engine.unflatten(state.flat), state.aux
 
@@ -186,29 +202,31 @@ def run_fedprox_ft(engine, rounds=20, tau=5, seed=0, lam=0.1, **kw):
 def run_apfl(engine, rounds=20, tau=5, seed=0, alpha=0.5, **kw):
     """APFL: personal model v mixed with global w; v trained locally, w
     trained federated; eval on alpha*v + (1-alpha)*w. (alpha fixed; the
-    adaptive-alpha variant is an ablation knob.)"""
+    adaptive-alpha variant is an ablation knob.)
+
+    Runs on the compiled round engine: state.flat carries the federated
+    branch w, the personal models v ride in ``aux`` (trained inside the
+    traced ``aggregate``), and the evaluated mixture is ``eval_flat`` —
+    one jitted round_step, no per-round host transfers."""
     p = engine.p
-    key = jax.random.PRNGKey(seed)
-    stacked = engine.init_clients(key)
-    v_flat = engine.flatten(stacked)  # personal models
-    N = engine.data.n_clients
-    best_val = jnp.full((N,), -jnp.inf)
-    best_flat = v_flat
-    for t in range(rounds):
-        # federated branch
-        stacked, _ = engine.local_train(stacked, jax.random.fold_in(key, t),
-                                        epochs=tau)
-        w_flat = _global_avg(engine.flatten(stacked), p)
-        stacked = engine.unflatten(w_flat)
-        # personal branch trains from the current mixture
-        mix = alpha * v_flat + (1 - alpha) * w_flat
-        pers, _ = engine.local_train(engine.unflatten(mix),
-                                     jax.random.fold_in(key, 7000 + t),
-                                     epochs=tau)
-        v_flat = engine.flatten(pers)
-        mix = alpha * v_flat + (1 - alpha) * w_flat
-        val_acc, _ = engine.eval_val(engine.unflatten(mix))
-        best_val, best_flat = _track_best(best_val, best_flat, val_acc, mix)
+
+    def aggregate(flat, aux, t):
+        w = _global_avg(flat, p)
+        # personal branch trains from the current mixture (old v, new w)
+        mix = alpha * aux["v"] + (1 - alpha) * w
+        pers, _ = engine.train_fn(engine.unflatten(mix),
+                                  jax.random.fold_in(aux["key"], 7000 + t),
+                                  epochs=tau)
+        return w, dict(aux, v=engine.flatten(pers))
+
+    def eval_flat(flat, aux):
+        return alpha * aux["v"] + (1 - alpha) * flat
+
+    best_flat, _, _ = _loop(
+        engine, rounds, tau, seed, aggregate, eval_flat=eval_flat,
+        cache_key=("apfl", alpha),
+        make_aux=lambda flat0, key: {"v": flat0, "key": key},
+        aux_specs={"v": engine.client_spec(2), "key": P()})
     return _finish(engine, best_flat)
 
 
@@ -228,28 +246,32 @@ def run_perfedavg(engine, rounds=20, tau=5, seed=0, inner_lr=0.01, **kw):
 
 def run_ditto(engine, rounds=20, tau=5, seed=0, lam=0.75, **kw):
     """Ditto: FedAvg global + per-client personal models with prox to the
-    global; evaluate the personal models."""
+    global; evaluate the personal models.
+
+    Runs on the compiled round engine: state.flat carries the global
+    branch, the personal models ride in ``aux`` (prox-trained towards the
+    freshly averaged global inside the traced ``aggregate``), and
+    ``eval_flat`` evaluates/tracks the personal models — one jitted
+    round_step, no per-round host transfers."""
     p = engine.p
-    key = jax.random.PRNGKey(seed)
-    glob = engine.init_clients(key)
-    pers_flat = engine.flatten(glob)
     lt_prox = _prox_engine(engine, lam)
-    N = engine.data.n_clients
-    best_val = jnp.full((N,), -jnp.inf)
-    best_flat = pers_flat
-    for t in range(rounds):
-        glob, _ = engine.local_train(glob, jax.random.fold_in(key, t),
-                                     epochs=tau)
-        g_flat = _global_avg(engine.flatten(glob), p)
-        glob = engine.unflatten(g_flat)
+
+    def aggregate(flat, aux, t):
+        g = _global_avg(flat, p)
         # personal step: prox-regularized towards the *global* params
-        pers = engine.unflatten(pers_flat)
-        pers, _ = lt_prox(pers, jax.random.fold_in(key, 5000 + t),
-                          epochs=tau, ref_flat=g_flat)
-        pers_flat = engine.flatten(pers)
-        val_acc, _ = engine.eval_val(engine.unflatten(pers_flat))
-        best_val, best_flat = _track_best(best_val, best_flat, val_acc,
-                                          pers_flat)
+        pers, _ = lt_prox(engine.unflatten(aux["pers"]),
+                          jax.random.fold_in(aux["key"], 5000 + t),
+                          epochs=tau, ref_flat=g)
+        return g, dict(aux, pers=engine.flatten(pers))
+
+    def eval_flat(flat, aux):
+        return aux["pers"]
+
+    best_flat, _, _ = _loop(
+        engine, rounds, tau, seed, aggregate, eval_flat=eval_flat,
+        cache_key=("ditto", lam),
+        make_aux=lambda flat0, key: {"pers": flat0, "key": key},
+        aux_specs={"pers": engine.client_spec(2), "key": P()})
     return _finish(engine, best_flat)
 
 

@@ -4,7 +4,9 @@ All N client models live in one pytree with leading client axis; local
 training is vmapped; aggregation is a mixing-matrix einsum (optionally the
 Pallas graph_mix kernel on flattened params). This is the TPU-native
 reformulation of the paper's sequential single-GPU client loop (DESIGN.md
-§3) — on the production mesh the client axis shards over 'pod'.
+§3) — `shard_clients` commits the client axis to mesh axes (production:
+('pod', 'data')), after which local training and evaluation compile
+shard-local and only the graph ops communicate (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -15,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from ..models.classifier import accuracy as _acc
 from ..models.classifier import xent_loss as _xent
@@ -25,7 +29,8 @@ class FLEngine:
     def __init__(self, model, data, lr: float = 0.05, momentum: float = 0.9,
                  weight_decay: float = 1e-3, batch_size: int = 16,
                  loss_fn: Optional[Callable] = None,
-                 acc_fn: Optional[Callable] = None):
+                 acc_fn: Optional[Callable] = None,
+                 mesh=None, client_axes=None):
         self.model = model
         self.data = data
         self.batch_size = min(batch_size, data.train_x.shape[1])
@@ -38,7 +43,50 @@ class FLEngine:
         example = model.init(jax.random.PRNGKey(0))
         flat, self._unravel = ravel_pytree(example)
         self.n_params = flat.shape[0]
+        self.mesh = None
+        self.client_axes = None
+        if mesh is not None:
+            self.shard_clients(mesh, client_axes)
+        else:
+            self._build()
+
+    # ----------------------------------------------------------- sharding
+    def shard_clients(self, mesh, client_axes=None):
+        """Commit the client axis to ``client_axes`` of ``mesh`` (default:
+        whichever of ('pod', 'data') the mesh has). Rebuilds the traced
+        fns with `with_sharding_constraint` on the client-stacked data and
+        params — closure constants do NOT inherit a `device_put` sharding
+        through jit, so the constraint must live inside the trace. N must
+        divide the product of the client axis sizes."""
+        if client_axes is None:
+            client_axes = tuple(a for a in ("pod", "data")
+                                if a in mesh.axis_names)
+        from ..sharding.compat import mesh_axis_sizes
+        self.mesh = mesh
+        self.client_axes = tuple(client_axes)
+        n_shards = 1
+        for a in self.client_axes:
+            n_shards *= mesh_axis_sizes(mesh)[a]
+        if self.data.n_clients % n_shards:
+            raise ValueError(
+                f"n_clients={self.data.n_clients} not divisible by the "
+                f"{n_shards} client shards of axes {self.client_axes}")
         self._build()
+        return self
+
+    def client_spec(self, ndim: int = 2) -> P:
+        """PartitionSpec sharding axis 0 over the client mesh axes."""
+        ca = self.client_axes if self.client_axes else ("pod", "data")
+        return P(ca, *((None,) * (ndim - 1)))
+
+    def constrain_clients(self, arr):
+        """with_sharding_constraint on the leading client axis (identity
+        when the engine has no mesh). Trace-level, so it applies equally
+        to closure constants and intermediates."""
+        if self.mesh is None:
+            return arr
+        return jax.lax.with_sharding_constraint(
+            arr, NamedSharding(self.mesh, self.client_spec(arr.ndim)))
 
     # ------------------------------------------------------------ plumbing
     def init_clients(self, key):
@@ -101,14 +149,20 @@ class FLEngine:
         def train_fn(stacked, key, epochs):
             N = self.data.n_clients
             keys = jax.random.split(key, N)
+            stacked = jax.tree.map(self.constrain_clients, stacked)
             return jax.vmap(
                 lambda p, x, y, k: one_client_epochs(p, x, y, k, epochs)
-            )(stacked, train_x, train_y, keys)
+            )(stacked, self.constrain_clients(train_x),
+              self.constrain_clients(train_y),
+              self.constrain_clients(keys))
 
         self.train_fn = train_fn
         self.local_train = jax.jit(train_fn, static_argnames=("epochs",))
 
         def eval_split_fn(stacked, xs, ys):
+            stacked = jax.tree.map(self.constrain_clients, stacked)
+            xs = self.constrain_clients(xs)
+            ys = self.constrain_clients(ys)
             return (jax.vmap(lambda p, x, y: self.acc_fn(p, {"x": x, "y": y}))
                     (stacked, xs, ys),
                     jax.vmap(lambda p, x, y: loss_fn(p, {"x": x, "y": y}))

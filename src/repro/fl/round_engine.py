@@ -10,9 +10,18 @@ compiled program, so there are no per-round host syncs, no per-round
 dispatch boundaries. Histories are preallocated device buffers pulled off
 device only at the end (or every K rounds, to bound device memory).
 
+When the engine carries a mesh (``FLEngine.shard_clients``), the same
+round_step runs SPMD over the client axis: ``flat`` / ``best_flat`` /
+``val_hist`` and the caller-specified ``aux`` leaves carry a
+`NamedSharding` over the client mesh axes (threaded through the jit as
+``in_shardings``/``out_shardings``), local training and evaluation stay
+shard-local, and the only cross-client collectives are the Eq.-4 mixing
+matmul and the GGC refresh (DESIGN.md §8, mesh layout).
+
 Both the DPFL driver (`repro.core.dpfl.run_dpfl`) and every Table-1
-baseline (`repro.fl.baselines._loop`) run on this engine, so all workloads
-exercise the same compiled path.
+baseline — including APFL and Ditto, whose personal/global side models
+ride in ``aux`` — run on this engine via `repro.fl.baselines._loop`, so
+all workloads exercise the same compiled path.
 """
 from __future__ import annotations
 
@@ -22,6 +31,8 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 
 @functools.partial(
@@ -41,7 +52,7 @@ class RoundState:
     val_hist:  (K, N) rolling validation-accuracy buffer, or None
     aux:       method-specific pytree (DPFL: adjacency, comm counters,
                candidate graph, graph-refresh key, graph history;
-               baselines: aggregate state dict)
+               APFL: personal models; Ditto: personal models)
 
     All run-specific arrays (keys, graphs, counters) live HERE rather than
     as closure constants, so a cached `round_step` retraces/recompiles
@@ -70,11 +81,60 @@ def init_round_state(flat, key, *, hist_len: int = 0, aux=None) -> RoundState:
         aux={} if aux is None else aux)
 
 
+def _is_pspec(x) -> bool:
+    return isinstance(x, P)
+
+
+def round_state_shardings(mesh, client_axes, *, hist_len: int = 0,
+                          aux=None, aux_specs=None) -> RoundState:
+    """The `RoundState`-shaped pytree of `NamedSharding`s for a client mesh.
+
+    flat/best_flat shard rows over ``client_axes`` (e.g. ('pod', 'data')),
+    best_val shards its only axis, val_hist shards axis 1; t/key replicate.
+    ``aux_specs`` (a pytree of `PartitionSpec` matching ``aux``) places the
+    method-specific leaves; with ``aux`` given instead, every aux leaf
+    replicates; with neither, the aux position is a single replicated
+    sharding usable as a jit in/out_shardings pytree *prefix* (but not for
+    `jax.device_put`, which needs the exact tree).
+    """
+    ca = tuple(client_axes)
+
+    def ns(*spec):
+        return NamedSharding(mesh, P(*spec))
+
+    if aux_specs is not None:
+        aux_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), aux_specs,
+                              is_leaf=_is_pspec)
+    elif aux is not None:
+        aux_sh = jax.tree.map(lambda _: ns(), aux)
+    else:
+        aux_sh = ns()
+    return RoundState(
+        t=ns(), key=ns(),
+        flat=ns(ca, None),
+        best_val=ns(ca),
+        best_flat=ns(ca, None),
+        val_hist=ns(None, ca) if hist_len else None,
+        aux=aux_sh)
+
+
+def shard_round_state(state: RoundState, mesh, client_axes,
+                      aux_specs=None) -> RoundState:
+    """`device_put` a concrete state onto its mesh shardings (the jit's
+    ``in_shardings`` cannot re-lay-out arrays committed to a different
+    device set, so the initial state is placed explicitly)."""
+    sh = round_state_shardings(mesh, client_axes,
+                               hist_len=0 if state.val_hist is None else 1,
+                               aux=state.aux, aux_specs=aux_specs)
+    return jax.device_put(state, sh)
+
+
 def make_round_step(engine, *, tau: int,
                     aggregate: Optional[Callable] = None,
                     local_train: Optional[Callable] = None,
                     eval_flat: Optional[Callable] = None,
-                    hist_len: int = 0):
+                    hist_len: int = 0,
+                    aux_specs=None):
     """Compile one federated round into ``round_step(state) -> state``.
 
     tau:         local epochs per round (static)
@@ -82,23 +142,36 @@ def make_round_step(engine, *, tau: int,
                  step (mixing matmul, graph refresh, comm accounting).
                  Default: no communication (local-only).
     local_train: override of engine.train_fn(stacked, key, epochs)
-    eval_flat:   optional transform of the aggregated flat params that
-                 produces the evaluated/tracked model (e.g. APFL mixtures)
+    eval_flat:   optional transform (flat, aux) -> flat of the aggregated
+                 params producing the evaluated/tracked model (APFL
+                 mixtures, Ditto personal models)
     hist_len:    >0 writes val accuracy into state.val_hist[t % hist_len]
+    aux_specs:   pytree of `PartitionSpec` for state.aux when the engine
+                 carries a mesh (default: aux replicates)
+
+    When ``engine.mesh`` is set (`FLEngine.shard_clients`), the jit is
+    built with `round_state_shardings` as ``in_shardings``/``out_shardings``
+    so the client axis stays sharded across rounds with no resharding at
+    dispatch boundaries.
     """
     lt = local_train if local_train is not None else engine.train_fn
     agg = aggregate if aggregate is not None else \
         (lambda flat, aux, t: (flat, aux))
 
-    @jax.jit
     def round_step(state: RoundState) -> RoundState:
         t = state.t
         stacked = engine.unflatten(state.flat)
         stacked, _ = lt(stacked, jax.random.fold_in(state.key, t),
                         epochs=tau)
-        flat = engine.flatten(stacked)
+        # barriers: keep the train -> aggregate -> eval stages fusion-
+        # isolated so the fused round tracks the staged host loop (and the
+        # mesh-sharded build tracks the single-device one) as closely as
+        # XLA allows — cross-stage fusion reorders fp accumulation, which
+        # the greedy graph decisions amplify (DESIGN.md §8)
+        flat = jax.lax.optimization_barrier(engine.flatten(stacked))
         flat, aux = agg(flat, state.aux, t)
-        ev = eval_flat(flat) if eval_flat is not None else flat
+        flat = jax.lax.optimization_barrier(flat)
+        ev = eval_flat(flat, aux) if eval_flat is not None else flat
         val_acc, _ = engine.eval_val_fn(engine.unflatten(ev))
         improved = val_acc > state.best_val
         val_hist = state.val_hist
@@ -113,7 +186,12 @@ def make_round_step(engine, *, tau: int,
             val_hist=val_hist,
             aux=aux)
 
-    return round_step
+    mesh = getattr(engine, "mesh", None)
+    if mesh is None:
+        return jax.jit(round_step)
+    sh = round_state_shardings(mesh, engine.client_axes, hist_len=hist_len,
+                               aux_specs=aux_specs)
+    return jax.jit(round_step, in_shardings=(sh,), out_shardings=sh)
 
 
 def run_rounds(round_step, state: RoundState, rounds: int,

@@ -27,11 +27,39 @@ def _impl(impl: Optional[str]) -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-def graph_mix(A, W, impl: Optional[str] = None, **kw):
+def graph_mix(A, W, impl: Optional[str] = None, *, mesh=None,
+              client_axes=None, **kw):
+    """Eq.-4 mixing matmul ``A @ W`` ((M, N) @ (N, P)).
+
+    With ``mesh``/``client_axes`` the op runs as a `shard_map` over the
+    client axis: each shard all-gathers the peer parameter panels and
+    computes its own row-block of A @ W with the dispatched kernel, so
+    fp32 accumulation is preserved shard-for-shard and the gather is the
+    round's only model-sized collective (DESIGN.md §8).
+    """
     m = _impl(impl)
-    if m == "ref":
-        return ref.graph_mix_ref(A, W)
-    return _graph_mix(A, W, interpret=(m == "interpret"), **kw)
+
+    def local(a, w):
+        if m == "ref":
+            return ref.graph_mix_ref(a, w)
+        return _graph_mix(a, w, interpret=(m == "interpret"), **kw)
+
+    if mesh is None:
+        return local(A, W)
+    from jax.sharding import PartitionSpec as P
+
+    from ..sharding.compat import shard_map
+
+    ca = tuple(client_axes)
+
+    def row_block(a_blk, w_blk):
+        w_full = jax.lax.all_gather(w_blk, ca, axis=0, tiled=True)
+        return local(a_blk, w_full)
+
+    # check_vma=False: pallas_call has no shard_map replication rule
+    return shard_map(row_block, mesh=mesh,
+                     in_specs=(P(ca, None), P(ca, None)),
+                     out_specs=P(ca, None), check_vma=False)(A, W)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None,

@@ -1,147 +1,95 @@
+"""Dry-run the PAPER'S OWN workload at production scale on forced host
+devices: N clients of the paper CNN running the SAME compiled DPFL
+``round_step`` as `run_dpfl` — built through `repro.core.dpfl`'s engine
+path with the client axis sharded over a ('pod', 'data') mesh — then
+lowered and compiled for roofline/memory analysis. There is no bespoke
+round implementation here: this file is a thin driver, so whatever the
+dry-run measures is exactly what training executes (DESIGN.md §8).
+
+    python -m repro.launch.fl_dryrun                   # 512 devices
+    python -m repro.launch.fl_dryrun --devices 8 --clients 16  # CI smoke
+"""
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ first lines — see dryrun.py. This entrypoint dry-runs the PAPER'S OWN
-# workload at production scale: N clients (paper: 100-200; here up to 512)
-# of the paper CNN, one full DPFL round = tau local epochs + vmapped GGC +
-# mixing-matrix aggregation, with the CLIENT axis sharded over the mesh.
+import sys
+
+# must run before any jax import (see dryrun.py); --devices is parsed by
+# hand for the same reason (both "--devices N" and "--devices=N" forms)
+_DEV = "512"
+for _i, _a in enumerate(sys.argv):
+    if _a == "--devices" and _i + 1 < len(sys.argv):
+        _DEV = sys.argv[_i + 1]
+    elif _a.startswith("--devices="):
+        _DEV = _a.split("=", 1)[1]
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={_DEV} "
+    + os.environ.get("XLA_FLAGS", ""))
 
 import argparse  # noqa: E402
 import json  # noqa: E402
 import time  # noqa: E402
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-from jax.flatten_util import ravel_pytree  # noqa: E402
-from jax.sharding import NamedSharding  # noqa: E402
-from jax.sharding import PartitionSpec as P  # noqa: E402
-
 from ..configs.paper_cnn import CONFIG as CNN_CONFIG  # noqa: E402
-from ..core.graph import all_clients_graph, mixing_matrix  # noqa: E402
-from ..models.classifier import PaperCNN, xent_loss  # noqa: E402
-from ..optim import sgd  # noqa: E402
+from ..core.dpfl import (DPFLConfig, abstract_round_state,  # noqa: E402
+                         dpfl_round_step)
+from ..data import make_federated_classification  # noqa: E402
+from ..fl.engine import FLEngine  # noqa: E402
+from ..models.classifier import PaperCNN  # noqa: E402
 from ..roofline import analyze_compiled  # noqa: E402
-from .mesh import make_production_mesh  # noqa: E402
+from .mesh import make_client_mesh  # noqa: E402
 
 
-def build_round(n_clients: int, n_train: int, n_val: int, tau: int,
-                budget: int, multi_pod: bool):
-    """One DPFL round (Alg. 1 lines 7-11) over client-sharded arrays.
-
-    Clients shard over ('pod','data') (multi) or ('data',) (single);
-    the CNN replicates over 'model' (it is tiny); GGC's N x 4 reward
-    probes and the mixing matmul generate the cross-client collectives.
-    """
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    caxes = ("pod", "data") if multi_pod else ("data",)
-    model = PaperCNN(CNN_CONFIG)
-    with jax.default_device(jax.devices()[0]):
-        example = model.init(jax.random.PRNGKey(0))  # tiny; concrete for
-    flat_example, unravel = ravel_pytree(example)    # ravel_pytree's treedef
-    n_params = flat_example.shape[0]
-    img = (CNN_CONFIG.image_size, CNN_CONFIG.image_size,
-           CNN_CONFIG.in_channels)
-    opt = sgd(0.01, momentum=0.9, weight_decay=1e-3)
-    bs = 16
-    nb = n_train // bs
-
-    def loss_fn(params, batch):
-        return xent_loss(model, params, batch)
-
-    def local_train_one(params, x, y, key):
-        opt_state = opt.init(params)
-
-        def epoch(carry, ekey):
-            params, opt_state = carry
-            perm = jax.random.permutation(ekey, n_train)
-            xb = x[perm[: nb * bs]].reshape((nb, bs) + x.shape[1:])
-            yb = y[perm[: nb * bs]].reshape((nb, bs))
-
-            def step(c, b):
-                p_, o_ = c
-                loss, g = jax.value_and_grad(loss_fn)(
-                    p_, {"x": b[0], "y": b[1]})
-                up, o_ = opt.update(g, o_, p_)
-                return (jax.tree.map(lambda a, u: a + u, p_, up), o_), None
-
-            (params, opt_state), _ = jax.lax.scan(
-                step, (params, opt_state), (xb, yb))
-            return (params, opt_state), None
-
-        (params, _), _ = jax.lax.scan(epoch, (params, opt_state),
-                                      jax.random.split(key, tau))
-        return params
-
-    def dpfl_round(flat_params, train_x, train_y, val_x, val_y, p, key):
-        # 1) tau local epochs, vmapped over the sharded client axis
-        stacked = jax.vmap(unravel)(flat_params)
-        keys = jax.random.split(key, n_clients)
-        stacked = jax.vmap(local_train_one)(stacked, train_x, train_y, keys)
-        flat = jax.vmap(lambda t: ravel_pytree(t)[0])(stacked)
-
-        # 2) GGC for every client (paper line 10)
-        def reward(fw, k):
-            return -loss_fn(unravel(fw), {"x": val_x[k], "y": val_y[k]})
-
-        adj = all_clients_graph(jax.random.fold_in(key, 1), flat, p,
-                                jnp.ones((n_clients, n_clients), bool),
-                                reward, budget)
-        # 3) Eq.-4 aggregation (the graph_mix pattern)
-        A = mixing_matrix(adj, p)
-        flat = (A @ flat.astype(jnp.float32)).astype(flat.dtype)
-        return flat, adj
-
-    cl = P(caxes)
-
-    def sds(shape, dt=jnp.float32):
-        return jax.ShapeDtypeStruct(shape, dt)
-
-    args = (
-        sds((n_clients, n_params)),
-        sds((n_clients, n_train) + img),
-        sds((n_clients, n_train), jnp.int32),
-        sds((n_clients, n_val) + img),
-        sds((n_clients, n_val), jnp.int32),
-        sds((n_clients,)),
-        jax.ShapeDtypeStruct((2,), jnp.uint32),
-    )
-    in_specs = (cl, P(caxes, None, None, None, None), P(caxes, None),
-                P(caxes, None, None, None, None), P(caxes, None),
-                P(None), P(None))
-    named = tuple(NamedSharding(mesh, s) for s in in_specs)
-    jf = jax.jit(dpfl_round, in_shardings=named)
-    return jf.lower(*args), mesh
+def build_engine_step(n_clients: int, n_train: int, n_val: int, tau: int,
+                      budget: int, pods: int, devices: int):
+    """Client-sharded FLEngine + the cached DPFL round_step + an abstract
+    RoundState, ready to lower."""
+    mesh = make_client_mesh(devices, pods=pods)
+    c = CNN_CONFIG
+    data = make_federated_classification(
+        seed=0, n_clients=n_clients, n_classes=c.n_classes,
+        image_shape=(c.image_size, c.image_size, c.in_channels),
+        n_train=n_train, n_val=n_val, n_test=n_val, noise=1.0)
+    engine = FLEngine(PaperCNN(CNN_CONFIG), data, lr=0.01,
+                      batch_size=16).shard_clients(mesh)
+    cfg = DPFLConfig(rounds=1, tau_train=tau, budget=budget,
+                     track_history=False)
+    return dpfl_round_step(engine, cfg), abstract_round_state(engine, cfg), \
+        mesh
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--clients", type=int, default=256)
-    ap.add_argument("--n-train", type=int, default=256)
-    ap.add_argument("--n-val", type=int, default=64)
+    ap.add_argument("--devices", type=int, default=512,
+                    help="forced host device count (consumed pre-jax)")
+    ap.add_argument("--clients", type=int, default=512)
+    ap.add_argument("--n-train", type=int, default=32)
+    ap.add_argument("--n-val", type=int, default=8)
     ap.add_argument("--tau", type=int, default=5)
     ap.add_argument("--budget", type=int, default=10)
-    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--pods", type=int, default=2)
     ap.add_argument("--out", default="benchmarks/results/dryrun")
     args = ap.parse_args()
     t0 = time.time()
-    lowered, mesh = build_round(args.clients, args.n_train, args.n_val,
-                                args.tau, args.budget,
-                                args.mesh == "multi")
+    step, state, mesh = build_engine_step(
+        args.clients, args.n_train, args.n_val, args.tau, args.budget,
+        args.pods, args.devices)
+    lowered = step.lower(state)
     compiled = lowered.compile()
     print("memory_analysis:", compiled.memory_analysis())
-    rec = {"workload": "dpfl_round_paper_cnn", "clients": args.clients,
-           "tau": args.tau, "budget": args.budget, "mesh": args.mesh,
-           "status": "ok"}
+    rec = {"workload": "dpfl_round_engine_paper_cnn",
+           "clients": args.clients, "tau": args.tau, "budget": args.budget,
+           "devices": args.devices, "pods": args.pods, "status": "ok"}
     rec.update(analyze_compiled(compiled, mesh.devices.size))
     rec["compile_s"] = time.time() - t0
     rl = rec["roofline"]
-    print(f"DPFL round x{args.clients} clients ({args.mesh}): "
-          f"compute={rl['compute_s']:.4f}s memory={rl['memory_s']:.4f}s "
+    print(f"DPFL round_step x{args.clients} clients on {args.devices} "
+          f"devices ({args.pods} pods): compute={rl['compute_s']:.4f}s "
+          f"memory={rl['memory_s']:.4f}s "
           f"collective={rl['collective_s']:.4f}s dominant={rl['dominant']}")
     if args.out:
         os.makedirs(args.out, exist_ok=True)
         fn = os.path.join(
-            args.out, f"fl_round_N{args.clients}_{args.mesh}.json")
+            args.out,
+            f"fl_round_N{args.clients}_D{args.devices}x{args.pods}.json")
         json.dump(rec, open(fn, "w"), indent=1, default=str)
 
 

@@ -26,6 +26,17 @@ def make_host_mesh():
     return make_mesh((n, 1), ("data", "model"))
 
 
+def make_client_mesh(n_devices=None, *, pods: int = 1):
+    """('pod', 'data') mesh for client-axis sharding of the FL round
+    engine (`FLEngine.shard_clients`, DESIGN.md §8). Uses every available
+    device by default; ``pods`` splits the leading axis for multi-pod
+    layouts (the Eq.-4 mix all-gather then crosses the pod axis)."""
+    n = n_devices if n_devices is not None else len(jax.devices())
+    if n % pods:
+        raise ValueError(f"{n} devices not divisible into {pods} pods")
+    return make_mesh((pods, n // pods), ("pod", "data"))
+
+
 # TPU v5e hardware model used by the roofline analysis (per chip).
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # B/s

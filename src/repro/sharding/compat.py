@@ -51,6 +51,37 @@ def make_mesh(axis_sizes, axis_names, **kw):
         return jax.make_mesh(tuple(axis_sizes), tuple(axis_names), **kw)
 
 
+def _register_barrier_batching():
+    """Older jax releases ship `optimization_barrier` without a batching
+    rule, which breaks its use inside vmapped scans (the rule is the
+    obvious one: the barrier is an elementwise identity, so bind the
+    batched operands unchanged and keep their batch dims). Registration
+    must happen before any vmap trace — scan batching is deferred, so a
+    lazy try/except at the call site fires too late."""
+    try:
+        from jax._src.lax import lax as _lax_internal
+        from jax.interpreters import batching as _batching
+    except ImportError:  # internals moved: assume the rule exists
+        return
+    prim = getattr(_lax_internal, "optimization_barrier_p", None)
+    if prim is None or prim in _batching.primitive_batchers:
+        return
+
+    def _batch_rule(args, dims):
+        return prim.bind(*args), dims
+
+    _batching.primitive_batchers[prim] = _batch_rule
+
+
+_register_barrier_batching()
+
+
+def optimization_barrier(x):
+    """`jax.lax.optimization_barrier`, safe under `vmap` on every
+    supported jax release (see `_register_barrier_batching`)."""
+    return jax.lax.optimization_barrier(x)
+
+
 def mesh_axis_sizes(mesh) -> dict:
     """{axis name: size} for Mesh and AbstractMesh across versions."""
     sizes = getattr(mesh, "axis_sizes", None)

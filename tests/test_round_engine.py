@@ -10,8 +10,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import DPFLConfig, run_dpfl, run_dpfl_reference
-from repro.core.graph import (make_bggc, make_ggc, make_ggc_heterogeneous,
-                              make_ggc_naive)
+from repro.core.graph import (all_clients_bggc, make_bggc, make_ggc,
+                              make_ggc_heterogeneous, make_ggc_naive)
 from repro.data import make_federated_classification
 from repro.fl.engine import FLEngine
 from repro.fl.round_engine import (init_round_state, make_round_step,
@@ -96,6 +96,115 @@ def test_round_step_comm_matches_host_loop(small_setting, refresh_period):
     for a, b in zip(new.val_acc_history, ref.val_acc_history):
         np.testing.assert_allclose(a, b, atol=1e-6)
     np.testing.assert_allclose(new.test_acc, ref.test_acc, atol=1e-6)
+
+
+def test_random_graph_comm_accounting(small_setting):
+    """Fig.-3 ablation comm accounting: preprocessing only downloads the
+    `budget` sampled peers per client (N * budget, NOT the BGGC's
+    N * (N-1)), and the compiled engine agrees with the host reference
+    round for round."""
+    eng = small_setting
+    cfg = DPFLConfig(rounds=3, tau_init=2, tau_train=1, budget=3, seed=0,
+                     random_graph=True)
+    new = run_dpfl(eng, cfg)
+    ref = run_dpfl_reference(eng, cfg)
+    N = _TOY_N
+    assert new.comm_preprocess == ref.comm_preprocess == N * 3
+    assert new.comm_downloads == ref.comm_downloads
+    np.testing.assert_allclose(new.test_acc, ref.test_acc, atol=1e-6)
+    # a budget larger than the peer count cannot download more than N-1
+    cfg_big = DPFLConfig(rounds=1, tau_init=1, tau_train=1, budget=N + 3,
+                         seed=0, random_graph=True)
+    big = run_dpfl(eng, cfg_big)
+    assert big.comm_preprocess == N * (N - 1)
+
+
+def test_vmapped_bggc_matches_sequential_loop(small_setting):
+    """The compiled all-clients BGGC (one traced program) selects exactly
+    what the old N-eager-calls python loop selected — same fold_in(key, k)
+    streams, bitwise-identical Omega."""
+    eng = small_setting
+    N = _TOY_N
+    reward = eng.make_reward_fn()
+    # BGGC runs on tau_init-trained clients (Alg. 1 line 3); same-init
+    # untrained clients would make every marginal gain exactly zero and
+    # the coin-flip stream pure fp noise
+    stacked = eng.init_clients(jax.random.PRNGKey(7))
+    stacked, _ = eng.local_train(stacked, jax.random.PRNGKey(8), epochs=2)
+    flat = eng.flatten(stacked)
+    full_mask = jnp.ones((N, N), bool)
+    k_graph = jax.random.PRNGKey(11)
+    for budget in (2, 4):
+        bggc = make_bggc(reward, budget)
+        loop = jnp.stack([
+            bggc(jax.random.fold_in(k_graph, k), jnp.int32(k),
+                 full_mask[k], flat, eng.p)
+            for k in range(N)])
+        vmapped = jax.jit(lambda kk, f, b=budget: all_clients_bggc(
+            kk, f, eng.p, full_mask, reward, b))(k_graph, flat)
+        np.testing.assert_array_equal(np.asarray(vmapped), np.asarray(loop),
+                                      err_msg=f"budget={budget}")
+
+
+def test_apfl_ditto_on_engine_match_host_loop(small_setting):
+    """Regression for the APFL/Ditto engine port: the compiled round_step
+    reproduces the original host-driven loops (federated/global branch in
+    state.flat, personal models in aux) to fp tolerance."""
+    from repro.fl.baselines import (_global_avg, _prox_engine, run_apfl,
+                                    run_ditto)
+    eng = small_setting
+    rounds, tau, seed = 2, 1, 0
+    p = eng.p
+    key = jax.random.PRNGKey(seed)
+
+    # --- original APFL host loop (pre-port reference)
+    alpha = 0.5
+    stacked = eng.init_clients(key)
+    v_flat = eng.flatten(stacked)
+    best_val = jnp.full((_TOY_N,), -jnp.inf)
+    best_flat = v_flat
+    for t in range(rounds):
+        stacked, _ = eng.local_train(stacked, jax.random.fold_in(key, t),
+                                     epochs=tau)
+        w_flat = _global_avg(eng.flatten(stacked), p)
+        stacked = eng.unflatten(w_flat)
+        mix = alpha * v_flat + (1 - alpha) * w_flat
+        pers, _ = eng.local_train(eng.unflatten(mix),
+                                  jax.random.fold_in(key, 7000 + t),
+                                  epochs=tau)
+        v_flat = eng.flatten(pers)
+        mix = alpha * v_flat + (1 - alpha) * w_flat
+        val_acc, _ = eng.eval_val(eng.unflatten(mix))
+        improved = val_acc > best_val
+        best_val = jnp.where(improved, val_acc, best_val)
+        best_flat = jnp.where(improved[:, None], mix, best_flat)
+    acc, _ = eng.eval_test(eng.unflatten(best_flat))
+    got = run_apfl(eng, rounds=rounds, tau=tau, seed=seed, alpha=alpha)
+    np.testing.assert_allclose(got["test_acc"], np.asarray(acc), atol=1e-6)
+
+    # --- original Ditto host loop (pre-port reference)
+    lam = 0.75
+    glob = eng.init_clients(key)
+    pers_flat = eng.flatten(glob)
+    lt_prox = _prox_engine(eng, lam)
+    best_val = jnp.full((_TOY_N,), -jnp.inf)
+    best_flat = pers_flat
+    for t in range(rounds):
+        glob, _ = eng.local_train(glob, jax.random.fold_in(key, t),
+                                  epochs=tau)
+        g_flat = _global_avg(eng.flatten(glob), p)
+        glob = eng.unflatten(g_flat)
+        pers, _ = lt_prox(eng.unflatten(pers_flat),
+                          jax.random.fold_in(key, 5000 + t),
+                          epochs=tau, ref_flat=g_flat)
+        pers_flat = eng.flatten(pers)
+        val_acc, _ = eng.eval_val(eng.unflatten(pers_flat))
+        improved = val_acc > best_val
+        best_val = jnp.where(improved, val_acc, best_val)
+        best_flat = jnp.where(improved[:, None], pers_flat, best_flat)
+    acc, _ = eng.eval_test(eng.unflatten(best_flat))
+    got = run_ditto(eng, rounds=rounds, tau=tau, seed=seed, lam=lam)
+    np.testing.assert_allclose(got["test_acc"], np.asarray(acc), atol=1e-6)
 
 
 def test_no_history_run_is_device_resident(small_setting):
