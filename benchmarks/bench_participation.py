@@ -1,0 +1,125 @@
+"""Partial-participation benchmark: rounds/sec, realized comm and accuracy
+of the compiled DPFL round engine across participation rate x availability
+model (DESIGN.md §9).
+
+  PYTHONPATH=src python -m benchmarks.bench_participation
+  PYTHONPATH=src python -m benchmarks.bench_participation --smoke --mesh
+
+Every (rate, model) cell reuses ONE compiled participation-aware
+round_step (the schedule rides in RoundState.aux, so the sweep retraces
+nothing), plus the schedule-free full-participation step as the rate=1.0
+baseline — the bench asserts the participation-aware path costs nothing
+when everyone shows up. ``--mesh`` shards the client axis over all
+visible devices (launch with XLA_FLAGS=--xla_force_host_platform_device_count=K
+set before the jax import, as the CI smoke does). Writes
+``benchmarks/results/BENCH_participation.json``.
+"""
+import argparse
+import json
+import os
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = os.path.join(ROOT, "benchmarks", "results")
+
+
+def time_run(fn, rounds, repeats=3):
+    """rounds/sec of the compiled round dispatches: best-of-``repeats``
+    timed run at ``rounds`` rounds minus the best preprocess-only
+    (0-round) run. The caller passes a ``rounds`` large enough that the
+    dispatch time dominates the subtraction noise."""
+    fn(rounds)  # pay compiles outside the timing
+    pre = best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(0)
+        pre = min(pre, time.perf_counter() - t0)
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(rounds)
+        best = min(best, time.perf_counter() - t0)
+    return rounds / max(best - pre, 1e-9)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rates", default="1.0,0.75,0.5,0.25")
+    ap.add_argument("--models", default="bernoulli,markov,cluster")
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--budget", type=int, default=4)
+    ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the client axis over all visible devices")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI sizes (also runs a correctness check)")
+    ap.add_argument("--out", default=os.path.join(
+        OUT, "BENCH_participation.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        args.rounds, args.clients, args.tau = 3, 8, 1
+        args.budget = 3
+
+    import jax
+    import numpy as np
+
+    from benchmarks.common import standard_setting
+    from repro.core import DPFLConfig, ParticipationConfig, run_dpfl
+    from repro.launch.mesh import make_client_mesh
+
+    _, _, engine = standard_setting(n_clients=args.clients)
+    devices = 1
+    if args.mesh:
+        devices = len(jax.devices())
+        engine.shard_clients(make_client_mesh(devices))
+    kw = dict(tau_init=2, tau_train=args.tau, budget=args.budget, seed=0,
+              track_history=False)
+
+    def run(rounds, part=None):
+        return run_dpfl(engine, DPFLConfig(rounds=rounds, participation=part,
+                                           **kw))
+
+    rows = []
+    # timing uses >= 16 dispatches so the per-round cost dominates the
+    # preprocess-subtraction noise, whatever the reported sweep size is
+    t_rounds = max(args.rounds, 16)
+    print("model,rate,rounds_per_s,comm_total,test_acc_mean")
+    # schedule-free full-participation path: the rate=1.0 reference
+    base_rps = time_run(lambda r: run(r), t_rounds)
+    base_res = run(args.rounds)
+    rows.append({"model": "none", "rate": 1.0, "rounds_per_s": base_rps,
+                 "comm_total": int(sum(base_res.comm_downloads)),
+                 "test_acc_mean": float(base_res.test_acc.mean())})
+    print(f"none,1.0,{base_rps:.3f},{rows[-1]['comm_total']},"
+          f"{rows[-1]['test_acc_mean']:.4f}")
+
+    for model in args.models.split(","):
+        for rate in (float(r) for r in args.rates.split(",")):
+            part = ParticipationConfig(rate=rate, model=model, seed=1)
+            rps = time_run(lambda r, p=part: run(r, p), t_rounds)
+            res = run(args.rounds, part)
+            row = {"model": model, "rate": rate, "rounds_per_s": rps,
+                   "comm_total": int(sum(res.comm_downloads)),
+                   "test_acc_mean": float(res.test_acc.mean()),
+                   "realized_rate": float(np.mean(res.participation))}
+            rows.append(row)
+            print(f"{model},{rate},{rps:.3f},{row['comm_total']},"
+                  f"{row['test_acc_mean']:.4f}")
+            if args.smoke and rate >= 1.0:
+                # rate=1.0 must reproduce the schedule-free path exactly
+                np.testing.assert_array_equal(res.test_acc,
+                                              base_res.test_acc)
+                assert res.comm_downloads == base_res.comm_downloads
+
+    rec = {"workload": "dpfl_participation_sweep", "clients": args.clients,
+           "rounds": args.rounds, "budget": args.budget, "tau": args.tau,
+           "devices": devices, "mesh": bool(args.mesh),
+           "baseline_rounds_per_s": base_rps, "rows": rows}
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        json.dump(rec, open(args.out, "w"), indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

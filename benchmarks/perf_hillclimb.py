@@ -72,7 +72,8 @@ def run_variant(arch, shape, mesh, tag, opts):
 def bench_dpfl_rounds(rounds=10, n_clients=16, repeats=2):
     """rounds/sec: host-driven reference loop vs compiled round engine.
     Preprocessing (shared) is excluded by timing whole runs minus a
-    0-round run; track_history=False keeps the new path device-resident."""
+    0-round run; track_history=False keeps the new path device-resident.
+    Writes the ``BENCH_dpfl.json`` summary for the bench trajectory."""
     from repro.core import DPFLConfig, run_dpfl, run_dpfl_reference
     from benchmarks.common import standard_setting
 
@@ -98,6 +99,16 @@ def bench_dpfl_rounds(rounds=10, n_clients=16, repeats=2):
     ref = time_path(run_dpfl_reference, "host_loop")
     new = time_path(run_dpfl, "round_engine")
     print(f"dpfl,speedup,ok,,{new / ref:.2f}x,,,,")
+    results_dir = os.path.join(ROOT, "benchmarks", "results")
+    os.makedirs(results_dir, exist_ok=True)
+    fn = os.path.join(results_dir, "BENCH_dpfl.json")
+    json.dump({"workload": "dpfl_round_loop", "rounds": rounds,
+               "clients": n_clients,
+               "host_loop_rounds_per_s": ref,
+               "round_engine_rounds_per_s": new,
+               "speedup": new / ref},
+              open(fn, "w"), indent=1)
+    print(f"wrote {fn}")
 
 
 def bench_dpfl_mesh_worker(rounds, n_clients, devices, repeats=2):

@@ -4,6 +4,7 @@ graph.py — GGC / BGGC / mixing matrices (Alg. 2, Alg. 3, Eq. 4)
 dpfl.py  — the alternating-minimization driver (Alg. 1)
 distributed.py — cross-pod DPFL mixing on the production mesh
 """
+from ..data.availability import ParticipationConfig
 from .dpfl import (DPFLConfig, DPFLResult, abstract_round_state,
                    dpfl_round_step, graph_stats, run_dpfl,
                    run_dpfl_reference)
@@ -13,7 +14,8 @@ from .graph import (GreedyCarry, all_clients_bggc, all_clients_graph,
                     make_ggc_naive, mix_flat, mix_pytree, mixing_matrix)
 
 __all__ = [
-    "DPFLConfig", "DPFLResult", "run_dpfl", "run_dpfl_reference",
+    "DPFLConfig", "DPFLResult", "ParticipationConfig",
+    "run_dpfl", "run_dpfl_reference",
     "graph_stats", "dpfl_round_step", "abstract_round_state",
     "GreedyCarry", "greedy_decision_step",
     "make_ggc", "make_ggc_naive", "make_bggc", "make_ggc_heterogeneous",

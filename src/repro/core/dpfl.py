@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as PSpec
 
+from ..data.availability import ParticipationConfig, schedule_for_data
 from ..fl.engine import FLEngine
 from ..fl.round_engine import (RoundState, init_round_state, make_round_step,
                                run_rounds, shard_round_state)
@@ -54,6 +55,13 @@ class DPFLConfig:
     history_every: int = 0            # pull histories off device every K
     #                                   rounds (0 = once at the end); also
     #                                   bounds the device history buffers
+    participation: Optional[ParticipationConfig] = None
+    # partial client participation (DESIGN.md §9): a seeded (rounds, N)
+    # availability schedule rides in aux; absent clients hold their
+    # params, mixing/GGC restrict to available peers, comm counters count
+    # only realized downloads. None = full participation (the schedule-
+    # free compiled path). Preprocessing (tau_init + BGGC) runs before
+    # the schedule starts and always sees every client.
 
 @dataclass
 class DPFLResult:
@@ -63,12 +71,18 @@ class DPFLResult:
     omega: Optional[np.ndarray] = None
     best_flat: Optional[np.ndarray] = None  # (N, P) best-val client models
     # communication accounting (models downloaded, the paper's cost unit):
-    # preprocessing BGGC = N-1 per client (streams every peer), but the
-    # random-graph (Fig. 3) ablation only downloads its `budget` sampled
-    # peers; each training round = |Omega_k| when GGC refreshes (needs all
-    # candidates) else |C_k| (aggregation only)
+    # preprocessing BGGC = 2(N-1) per client (Algorithm 3 streams every
+    # peer in BOTH phases — w^Y accumulation, then batched decisions; a
+    # client can hold at most B_c models, so the decision phase must
+    # re-receive each batch), but the random-graph (Fig. 3) ablation only
+    # downloads its `budget` sampled peers once; each training round =
+    # |Omega_k| when GGC refreshes (needs all candidates) else |C_k|
+    # (aggregation only), restricted to AVAILABLE (downloader AND peer)
+    # clients under partial participation
     comm_downloads: list = field(default_factory=list)  # per-round totals
     comm_preprocess: int = 0
+    participation: Optional[np.ndarray] = None  # (rounds, N) realized
+    #                                             schedule, if enabled
 
 
 def _sparsity(adj: np.ndarray) -> float:
@@ -85,12 +99,19 @@ def _symmetry(adj: np.ndarray) -> float:
 
 
 def _comm_preprocess(cfg: DPFLConfig, N: int, budget: int) -> int:
-    """Models downloaded during preprocessing: BGGC streams every peer
-    (N-1 per client); the random-graph (Fig. 3) ablation only downloads
-    the `budget` sampled peers of each client."""
+    """Models downloaded during preprocessing. BGGC (Algorithm 3) streams
+    every peer in BOTH communication phases — once to accumulate the
+    shrink-set sum w^Y (lines 2-7) and once more for the batched greedy
+    decisions: the whole point of BGGC is that a client never holds more
+    than B_c models, so the decision phase cannot replay stored batches
+    and must re-receive them. Realized downloads are therefore 2(N-1) per
+    client (audited against `make_bggc`, which `tests/test_round_engine`
+    asserts for engine and reference alike; DESIGN.md §9). The
+    random-graph (Fig. 3) ablation downloads only the `budget` sampled
+    peers of each client, once."""
     if cfg.random_graph:
         return N * min(budget, N - 1)
-    return N * (N - 1)
+    return 2 * N * (N - 1)
 
 
 def _cached_bggc(engine: FLEngine, cfg: DPFLConfig, reward_fn, budget: int):
@@ -153,6 +174,17 @@ def _preprocess(engine: FLEngine, cfg: DPFLConfig, reward_fn, budget: int):
     return omega, flat, k_graph, k_train
 
 
+def _realized_downloads(g, active):
+    """Downloads that actually happen on a partial-participation round:
+    an AVAILABLE client downloads its AVAILABLE peers in graph ``g``
+    (diagonal excluded — a client never downloads itself). With an
+    all-ones mask this equals ``sum(g) - N`` exactly (integer arithmetic),
+    the full-participation count."""
+    N = g.shape[0]
+    off = jnp.asarray(g, bool) & ~jnp.eye(N, dtype=bool)
+    return jnp.sum(off & active[:, None] & active[None, :])
+
+
 def _make_dpfl_aggregate(engine: FLEngine, cfg: DPFLConfig, reward_fn,
                          budget: int, hist_len: int):
     """The traced communication step of one DPFL round: conditional GGC
@@ -161,31 +193,58 @@ def _make_dpfl_aggregate(engine: FLEngine, cfg: DPFLConfig, reward_fn,
     are read from ``aux`` (not closed over), so the compiled step is
     reusable across runs. Under a client mesh, the GGC refresh and the
     Eq.-4 mix run their shard_map paths — the round's only cross-client
-    collectives."""
+    collectives.
+
+    With ``cfg.participation`` (DESIGN.md §9), round t reads its
+    availability row from ``aux["part"]``: the GGC refresh selects only
+    among AVAILABLE candidates in Omega_k and absent clients keep their
+    previous C_k; the Eq.-4 matrix is row/col-restricted to available
+    peers and renormalized; comm counters count only realized downloads.
+    """
     p = engine.p
     mesh, ca = engine.mesh, engine.client_axes
+    part = cfg.participation is not None
 
     def aggregate(flat, aux, t):
         adj = aux["adj"]
         omega = aux["omega"]
         N = adj.shape[0]
+        active = aux["part"][t] if part else None
         if cfg.random_graph:
             new_adj = adj  # Omega is the (fixed, random) graph
-            comm_t = jnp.sum(adj) - N
+            comm_t = (_realized_downloads(adj, active) if part
+                      else jnp.sum(adj) - N)
         else:
             refresh = (t % cfg.refresh_period) == 0
             # line 9 needs all of Omega_k; aggregation-only rounds download
-            # the currently selected C_k
-            comm_t = jnp.where(refresh, jnp.sum(omega), jnp.sum(adj)) - N
-            new_adj = jax.lax.cond(
-                refresh,
-                lambda f: all_clients_graph(
-                    jax.random.fold_in(aux["k_graph"], 1000 + t), f, p,
-                    omega, reward_fn, budget, impl=cfg.graph_impl,
-                    mix_impl=cfg.mix_impl, mesh=mesh, client_axes=ca),
-                lambda f: adj,
-                flat)
-        A = mixing_matrix(new_adj, p)
+            # the currently selected C_k — in both cases only the
+            # available downloader/peer pairs move models
+            if part:
+                comm_t = jnp.where(refresh,
+                                   _realized_downloads(omega, active),
+                                   _realized_downloads(adj, active))
+
+                def do_refresh(f):
+                    # available clients re-select among their AVAILABLE
+                    # candidates; absent clients keep their previous C_k
+                    refreshed = all_clients_graph(
+                        jax.random.fold_in(aux["k_graph"], 1000 + t), f, p,
+                        omega & active[None, :], reward_fn, budget,
+                        impl=cfg.graph_impl, mix_impl=cfg.mix_impl,
+                        mesh=mesh, client_axes=ca)
+                    return jnp.where(active[:, None], refreshed, adj)
+            else:
+                comm_t = jnp.where(refresh, jnp.sum(omega),
+                                   jnp.sum(adj)) - N
+
+                def do_refresh(f):
+                    return all_clients_graph(
+                        jax.random.fold_in(aux["k_graph"], 1000 + t), f, p,
+                        omega, reward_fn, budget, impl=cfg.graph_impl,
+                        mix_impl=cfg.mix_impl, mesh=mesh, client_axes=ca)
+            new_adj = jax.lax.cond(refresh, do_refresh, lambda f: adj,
+                                   flat)
+        A = mixing_matrix(new_adj, p, active=active)
         mixed = mix_flat(A, flat, impl=cfg.mix_impl, mesh=mesh,
                          client_axes=ca)
         aux = dict(aux, adj=new_adj,
@@ -198,10 +257,11 @@ def _make_dpfl_aggregate(engine: FLEngine, cfg: DPFLConfig, reward_fn,
     return aggregate
 
 
-def _dpfl_aux_specs(engine: FLEngine, hist_len: int):
+def _dpfl_aux_specs(engine: FLEngine, hist_len: int,
+                    participation: bool = False):
     """PartitionSpecs for the DPFL aux pytree on the client mesh: the
-    adjacency, Omega and graph history shard their client-row axis; the
-    graph key and comm counters replicate."""
+    adjacency, Omega, graph history and the participation schedule shard
+    their client axis; the graph key and comm counters replicate."""
     if engine.mesh is None:
         return None
     ca = tuple(engine.client_axes)
@@ -209,6 +269,8 @@ def _dpfl_aux_specs(engine: FLEngine, hist_len: int):
              "k_graph": PSpec(), "comm": PSpec()}
     if hist_len:
         specs["graph_hist"] = PSpec(None, ca, None)
+    if participation:
+        specs["part"] = PSpec(None, ca)
     return specs
 
 
@@ -221,18 +283,19 @@ def _cached_round_step(engine: FLEngine, cfg: DPFLConfig, budget: int,
     cache = getattr(engine, "_dpfl_round_step_cache", None)
     if cache is None:
         cache = engine._dpfl_round_step_cache = {}
+    part = cfg.participation is not None
     key = (cfg.tau_train, cfg.refresh_period, cfg.random_graph,
-           cfg.graph_impl, cfg.mix_impl, budget, hist_len, engine.mesh,
-           engine.client_axes)
+           cfg.graph_impl, cfg.mix_impl, budget, hist_len, part,
+           engine.mesh, engine.client_axes)
     if key not in cache:
         reward_fn = engine.make_reward_fn()
         aggregate = _make_dpfl_aggregate(engine, cfg, reward_fn, budget,
                                          hist_len)
-        cache[key] = make_round_step(engine, tau=cfg.tau_train,
-                                     aggregate=aggregate,
-                                     hist_len=hist_len,
-                                     aux_specs=_dpfl_aux_specs(engine,
-                                                               hist_len))
+        cache[key] = make_round_step(
+            engine, tau=cfg.tau_train, aggregate=aggregate,
+            hist_len=hist_len,
+            aux_specs=_dpfl_aux_specs(engine, hist_len, part),
+            participation_key="part" if part else None)
     return cache[key]
 
 
@@ -254,14 +317,20 @@ def run_dpfl(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
            "comm": jnp.zeros((cfg.rounds,), jnp.int32)}
     if hist_len:
         aux["graph_hist"] = jnp.zeros((hist_len, N, N), bool)
+    if cfg.participation is not None:
+        sched = schedule_for_data(cfg.participation, cfg.rounds,
+                                  engine.data)
+        aux["part"] = jnp.asarray(sched)
+        result.participation = np.asarray(sched)
     round_step = _cached_round_step(engine, cfg, budget, hist_len)
     state = init_round_state(flat, k_train, hist_len=hist_len, aux=aux)
     if engine.mesh is not None:
         # the jit's in_shardings cannot re-lay-out committed arrays, so
         # place the initial state on the client mesh explicitly
-        state = shard_round_state(state, engine.mesh, engine.client_axes,
-                                  aux_specs=_dpfl_aux_specs(engine,
-                                                            hist_len))
+        state = shard_round_state(
+            state, engine.mesh, engine.client_axes,
+            aux_specs=_dpfl_aux_specs(engine, hist_len,
+                                      cfg.participation is not None))
 
     def flush_histories(st, k):
         # the ONLY host transfers: every hist_len rounds + once at the end
@@ -299,25 +368,41 @@ def run_dpfl_reference(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
     result = DPFLResult(test_acc=None, omega=np.asarray(omega))
     result.comm_preprocess = _comm_preprocess(cfg, N, budget)
     adj = omega
+    sched = None
+    if cfg.participation is not None:
+        sched = schedule_for_data(cfg.participation, cfg.rounds,
+                                  engine.data)
+        result.participation = np.asarray(sched)
 
     for t in range(cfg.rounds):
+        prev_flat = flat
         stacked, _ = engine.local_train(
             stacked, jax.random.fold_in(k_train, t), epochs=cfg.tau_train)
         flat = engine.flatten(stacked)
+        active = None
+        if sched is not None:
+            # absent clients hold their round-start params
+            active = jnp.asarray(sched[t])
+            flat = jnp.where(active[:, None], flat, prev_flat)
         refresh = (not cfg.random_graph) and (t % cfg.refresh_period == 0)
-        if refresh:
+        count_graph = omega if (refresh or cfg.random_graph) else adj
+        if active is None:
             result.comm_downloads.append(
-                int(np.asarray(omega).sum()) - N)
+                int(np.asarray(count_graph).sum()) - N)
         else:
-            result.comm_downloads.append(int(np.asarray(adj).sum()) - N)
+            result.comm_downloads.append(
+                int(_realized_downloads(count_graph, active)))
         if cfg.random_graph:
             adj = omega
         elif refresh:
-            adj = all_clients_graph(
-                jax.random.fold_in(k_graph, 1000 + t), flat, p, omega,
+            cand = omega if active is None else omega & active[None, :]
+            refreshed = all_clients_graph(
+                jax.random.fold_in(k_graph, 1000 + t), flat, p, cand,
                 reward_fn, budget, impl=cfg.graph_impl,
                 mix_impl=cfg.mix_impl)
-        A = mixing_matrix(adj, p)
+            adj = refreshed if active is None else \
+                jnp.where(active[:, None], refreshed, adj)
+        A = mixing_matrix(adj, p, active=active)
         flat = mix_flat(A, flat, impl=cfg.mix_impl)
         stacked = engine.unflatten(flat)
 
@@ -363,6 +448,8 @@ def abstract_round_state(engine: FLEngine, cfg: DPFLConfig) -> RoundState:
            "k_graph": key_t, "comm": sds((cfg.rounds,), jnp.int32)}
     if hist_len:
         aux["graph_hist"] = sds((hist_len, N, N), jnp.bool_)
+    if cfg.participation is not None:
+        aux["part"] = sds((cfg.rounds, N), jnp.bool_)
     return RoundState(
         t=sds((), jnp.int32), key=key_t, flat=sds((N, P_)),
         best_val=sds((N,)), best_flat=sds((N, P_)),

@@ -35,13 +35,24 @@ from ..sharding.compat import optimization_barrier as _barrier
 # ------------------------------------------------------------------ mixing
 
 
-def mixing_matrix(adj, p):
+def mixing_matrix(adj, p, active=None):
     """adj: (N, N) bool/float, adj[k, i]=1 iff k receives from i (diagonal
     forced on: every client 'collaborates' with itself). p: (N,) weights.
     Returns row-stochastic A with A[k, i] = p_i adj[k, i] / sum_j p_j adj[k, j].
+
+    ``active`` ((N,) bool, optional) restricts the round to the available
+    clients (DESIGN.md §9): rows AND columns of absent clients zero out
+    before the forced diagonal, so an absent client's row is e_k (it holds
+    its params) and an available client renormalizes its Eq.-4 weights
+    over only its available peers. ``active=None`` (and an all-ones mask —
+    multiplying by 1.0 is exact) reproduces the full-participation matrix
+    bitwise.
     """
     adj = jnp.asarray(adj, jnp.float32)
     n = adj.shape[0]
+    if active is not None:
+        act = jnp.asarray(active, jnp.float32)
+        adj = adj * act[:, None] * act[None, :]
     adj = jnp.maximum(adj, jnp.eye(n, dtype=adj.dtype))
     w = adj * p[None, :]
     return w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-12)

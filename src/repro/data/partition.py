@@ -25,8 +25,21 @@ def pathological_assignment(rng: np.random.Generator, n_clients: int,
                             n_classes: int, classes_per_client: int
                             ) -> np.ndarray:
     """(n_clients, n_classes) bool: exactly classes_per_client True per row,
-    with every class covered when possible (round-robin base)."""
+    with every class covered when possible (round-robin base).
+
+    Raises ValueError when ``classes_per_client`` is not in
+    [1, n_classes] — a client cannot hold more distinct classes than
+    exist (the dedup-and-refill loop below would otherwise never
+    terminate) — or when the client/class counts are not positive.
+    """
     k = classes_per_client
+    if n_clients < 1 or n_classes < 1:
+        raise ValueError(f"need n_clients >= 1 and n_classes >= 1, got "
+                         f"n_clients={n_clients}, n_classes={n_classes}")
+    if not 1 <= k <= n_classes:
+        raise ValueError(
+            f"classes_per_client={k} must be in [1, n_classes={n_classes}]"
+            f": a client holds distinct classes")
     assign = np.zeros((n_clients, n_classes), dtype=bool)
     # round-robin shards so all classes get used, like the McMahan split
     shards = []

@@ -90,7 +90,8 @@ def make_federated_classification(
     noise: float = 0.6,
     image_shape: Optional[Tuple[int, ...]] = None,  # e.g. (32, 32, 3)
     feature_dim: int = 32,
-    p_mode: str = "uniform",
+    p_mode: str = "uniform",       # uniform | size (p_k from the clients'
+    #                                actual effective train-set sizes)
     assign_level: str = "client",  # client | cluster (peers share classes)
 ) -> FederatedData:
     rng = np.random.default_rng(seed)
@@ -118,9 +119,25 @@ def make_federated_classification(
     te = _sample_split(rng, dists, protos, cluster_of, n_test, noise, shape)
     if p_mode == "uniform":
         p = np.full(n_clients, 1.0 / n_clients)
-    else:  # size-proportional with synthetic virtual sizes
-        sizes = rng.integers(50, 500, n_clients).astype(float)
-        p = sizes / sizes.sum()
+    else:
+        # size-proportional: the Eq.-4 weights p_k must describe the data
+        # the clients actually train on, not virtual sizes drawn on the
+        # side. Each client keeps a rng-drawn EFFECTIVE sample count
+        # n_eff_i in [max(1, n_train/4), n_train]; rows beyond n_eff_i are
+        # resampled (with replacement) from the first n_eff_i, so the
+        # stacked arrays stay equal-sized (vmap-friendly) while the
+        # client's true dataset has exactly n_eff_i distinct samples —
+        # and p_k = n_eff_k / sum_j n_eff_j matches the data (tested).
+        tr_x, tr_y = tr
+        sizes = rng.integers(max(1, n_train // 4), n_train + 1, n_clients)
+        for i in range(n_clients):
+            n_eff = int(sizes[i])
+            if n_eff < n_train:
+                fill = rng.integers(0, n_eff, n_train - n_eff)
+                tr_x[i, n_eff:] = tr_x[i, fill]
+                tr_y[i, n_eff:] = tr_y[i, fill]
+        tr = (tr_x, tr_y)
+        p = sizes.astype(float) / sizes.sum()
     return FederatedData(*tr, *va, *te, p=p, cluster=cluster_of,
                          n_classes=n_classes)
 

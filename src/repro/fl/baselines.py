@@ -24,13 +24,23 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..core.graph import mix_flat, mixing_matrix
+from ..data.availability import schedule_for_data
 from .engine import FLEngine
 from .round_engine import (init_round_state, make_round_step, run_rounds,
                            shard_round_state)
 
 
-def _global_avg(flat, p):
-    g = jnp.einsum("n,np->p", p, flat)
+def _global_avg(flat, p, active=None):
+    """FedAvg server average. Under partial participation (``active``
+    (N,) bool) only the participating clients' models enter the average
+    and their weights renormalize — the classic sampled-FedAvg server
+    update (an all-ones mask divides by sum(p)=1, reproducing the full
+    average)."""
+    if active is None:
+        g = jnp.einsum("n,np->p", p, flat)  # p sums to 1: no renorm needed
+    else:
+        w = p * active
+        g = jnp.einsum("n,np->p", w, flat) / jnp.maximum(jnp.sum(w), 1e-12)
     return jnp.broadcast_to(g[None], flat.shape)
 
 
@@ -41,7 +51,8 @@ def _finish(engine, best_flat):
 
 
 def _loop(engine, rounds, tau, seed, aggregate, *, local_train=None,
-          eval_flat=None, cache_key=None, make_aux=None, aux_specs=None):
+          eval_flat=None, cache_key=None, make_aux=None, aux_specs=None,
+          participation=None):
     """Generic round loop: local train -> aggregate -> track best-val.
 
     Runs on the compiled round engine: the whole round (including the
@@ -51,12 +62,20 @@ def _loop(engine, rounds, tau, seed, aggregate, *, local_train=None,
     prox models) carry them in ``aux`` via ``make_aux(flat0, key)``;
     ``eval_flat(flat, aux)`` selects the evaluated/tracked model.
 
+    ``participation`` (a `repro.data.ParticipationConfig`) enables
+    partial client participation (DESIGN.md §9): the seeded (rounds, N)
+    schedule rides in ``aux["part"]`` (client-sharded under a mesh),
+    round-t local training holds absent clients' params, and
+    ``aggregate`` reads the same row for its own sampling semantics
+    (e.g. `_global_avg(..., active=...)`).
+
     ``cache_key`` (a hashable tuple naming the method + its closure
     hyperparameters) memoizes the compiled round_step on the engine —
     passing it asserts that ``aggregate``/``local_train``/``eval_flat``
     compute the same function for the same (engine, tau, cache_key), so
-    repeated baseline runs and sweeps skip recompilation. Under a client
-    mesh (`engine.shard_clients`), ``aux_specs`` places the aux leaves and
+    repeated baseline runs and sweeps skip recompilation (the
+    participation flag is appended automatically). Under a client mesh
+    (`engine.shard_clients`), ``aux_specs`` places the aux leaves and
     the round_step jit carries the client-axis shardings."""
     key = jax.random.PRNGKey(seed)
     stacked = engine.init_clients(key)
@@ -64,21 +83,32 @@ def _loop(engine, rounds, tau, seed, aggregate, *, local_train=None,
     aux = make_aux(flat0, key) if make_aux is not None else {}
     if aux_specs is None:  # default: every aux leaf replicates
         aux_specs = jax.tree.map(lambda _: P(), aux)
+    part_key = None
+    if participation is not None:
+        sched = schedule_for_data(participation, rounds, engine.data)
+        aux = dict(aux, part=jnp.asarray(sched))
+        aux_specs = dict(aux_specs,
+                         part=P(None, tuple(engine.client_axes))
+                         if engine.mesh is not None else P())
+        part_key = "part"
     if cache_key is None:
         round_step = make_round_step(engine, tau=tau, aggregate=aggregate,
                                      local_train=local_train,
                                      eval_flat=eval_flat,
-                                     aux_specs=aux_specs)
+                                     aux_specs=aux_specs,
+                                     participation_key=part_key)
     else:
         cache = getattr(engine, "_baseline_step_cache", None)
         if cache is None:
             cache = engine._baseline_step_cache = {}
-        k = (tau, engine.mesh, engine.client_axes) + tuple(cache_key)
+        k = (tau, engine.mesh, engine.client_axes,
+             part_key is not None) + tuple(cache_key)
         if k not in cache:
             cache[k] = make_round_step(engine, tau=tau, aggregate=aggregate,
                                        local_train=local_train,
                                        eval_flat=eval_flat,
-                                       aux_specs=aux_specs)
+                                       aux_specs=aux_specs,
+                                       participation_key=part_key)
         round_step = cache[k]
     state = init_round_state(flat0, key, aux=aux)
     if engine.mesh is not None:
@@ -97,11 +127,20 @@ def run_local(engine, rounds=20, tau=5, seed=0, **kw):
     return _finish(engine, best_flat)
 
 
-def run_fedavg(engine, rounds=20, tau=5, seed=0, **kw):
+def run_fedavg(engine, rounds=20, tau=5, seed=0, participation=None, **kw):
     p = engine.p
-    best_flat, _, _ = _loop(engine, rounds, tau, seed,
-                            lambda f, s, t: (_global_avg(f, p), s),
-                            cache_key=("global_avg",))
+    if participation is None:
+        def aggregate(f, s, t):
+            return _global_avg(f, p), s
+    else:
+        def aggregate(f, s, t):
+            # sampled FedAvg: only participants enter the (renormalized)
+            # average AND download the new global; absent clients hold
+            a = s["part"][t]
+            return jnp.where(a[:, None], _global_avg(f, p, active=a), f), s
+    best_flat, _, _ = _loop(engine, rounds, tau, seed, aggregate,
+                            cache_key=("global_avg",),
+                            participation=participation)
     return _finish(engine, best_flat)
 
 
@@ -161,12 +200,18 @@ def _prox_engine(engine, lam):
 
         @functools.partial(jax.jit, static_argnames=("epochs",))
         def _lt(stacked, key, epochs, ref):
+            # same client-axis constraints as FLEngine.train_fn — without
+            # them a client mesh could silently reshard params/data/keys
+            # mid-round when this runs inside the compiled round_step
             N = engine.data.n_clients
             keys = jax.random.split(key, N)
+            stacked = jax.tree.map(engine.constrain_clients, stacked)
             return jax.vmap(
                 lambda pr, x, y, k, r: one_client(pr, x, y, k, epochs, r)
-            )(stacked, jnp.asarray(engine.data.train_x),
-              jnp.asarray(engine.data.train_y), keys, ref)
+            )(stacked, engine.constrain_clients(engine.train_data[0]),
+              engine.constrain_clients(engine.train_data[1]),
+              engine.constrain_clients(keys),
+              engine.constrain_clients(ref))
 
         def local_train(stacked, key, epochs, ref_flat=None):
             ref = engine.flatten(stacked) if ref_flat is None else ref_flat
@@ -199,7 +244,8 @@ def run_fedprox_ft(engine, rounds=20, tau=5, seed=0, lam=0.1, **kw):
     return {"test_acc": np.asarray(acc)}
 
 
-def run_apfl(engine, rounds=20, tau=5, seed=0, alpha=0.5, **kw):
+def run_apfl(engine, rounds=20, tau=5, seed=0, alpha=0.5,
+             participation=None, **kw):
     """APFL: personal model v mixed with global w; v trained locally, w
     trained federated; eval on alpha*v + (1-alpha)*w. (alpha fixed; the
     adaptive-alpha variant is an ablation knob.)
@@ -207,17 +253,26 @@ def run_apfl(engine, rounds=20, tau=5, seed=0, alpha=0.5, **kw):
     Runs on the compiled round engine: state.flat carries the federated
     branch w, the personal models v ride in ``aux`` (trained inside the
     traced ``aggregate``), and the evaluated mixture is ``eval_flat`` —
-    one jitted round_step, no per-round host transfers."""
+    one jitted round_step, no per-round host transfers. Under partial
+    participation, absent clients skip BOTH branches: the federated
+    average renormalizes over participants and the personal models of
+    absent clients hold."""
     p = engine.p
 
     def aggregate(flat, aux, t):
-        w = _global_avg(flat, p)
+        active = aux["part"][t] if participation is not None else None
+        w = _global_avg(flat, p, active=active)
+        if active is not None:
+            w = jnp.where(active[:, None], w, flat)
         # personal branch trains from the current mixture (old v, new w)
         mix = alpha * aux["v"] + (1 - alpha) * w
         pers, _ = engine.train_fn(engine.unflatten(mix),
                                   jax.random.fold_in(aux["key"], 7000 + t),
                                   epochs=tau)
-        return w, dict(aux, v=engine.flatten(pers))
+        v = engine.flatten(pers)
+        if active is not None:
+            v = jnp.where(active[:, None], v, aux["v"])
+        return w, dict(aux, v=v)
 
     def eval_flat(flat, aux):
         return alpha * aux["v"] + (1 - alpha) * flat
@@ -226,7 +281,8 @@ def run_apfl(engine, rounds=20, tau=5, seed=0, alpha=0.5, **kw):
         engine, rounds, tau, seed, aggregate, eval_flat=eval_flat,
         cache_key=("apfl", alpha),
         make_aux=lambda flat0, key: {"v": flat0, "key": key},
-        aux_specs={"v": engine.client_spec(2), "key": P()})
+        aux_specs={"v": engine.client_spec(2), "key": P()},
+        participation=participation)
     return _finish(engine, best_flat)
 
 
@@ -244,7 +300,8 @@ def run_perfedavg(engine, rounds=20, tau=5, seed=0, inner_lr=0.01, **kw):
     return {"test_acc": np.asarray(acc)}
 
 
-def run_ditto(engine, rounds=20, tau=5, seed=0, lam=0.75, **kw):
+def run_ditto(engine, rounds=20, tau=5, seed=0, lam=0.75,
+              participation=None, **kw):
     """Ditto: FedAvg global + per-client personal models with prox to the
     global; evaluate the personal models.
 
@@ -252,17 +309,25 @@ def run_ditto(engine, rounds=20, tau=5, seed=0, lam=0.75, **kw):
     branch, the personal models ride in ``aux`` (prox-trained towards the
     freshly averaged global inside the traced ``aggregate``), and
     ``eval_flat`` evaluates/tracks the personal models — one jitted
-    round_step, no per-round host transfers."""
+    round_step, no per-round host transfers. Under partial participation,
+    absent clients neither enter the (renormalized) global average nor
+    take a personal prox step — both their branches hold."""
     p = engine.p
     lt_prox = _prox_engine(engine, lam)
 
     def aggregate(flat, aux, t):
-        g = _global_avg(flat, p)
+        active = aux["part"][t] if participation is not None else None
+        g = _global_avg(flat, p, active=active)
+        if active is not None:
+            g = jnp.where(active[:, None], g, flat)
         # personal step: prox-regularized towards the *global* params
         pers, _ = lt_prox(engine.unflatten(aux["pers"]),
                           jax.random.fold_in(aux["key"], 5000 + t),
                           epochs=tau, ref_flat=g)
-        return g, dict(aux, pers=engine.flatten(pers))
+        pers_flat = engine.flatten(pers)
+        if active is not None:
+            pers_flat = jnp.where(active[:, None], pers_flat, aux["pers"])
+        return g, dict(aux, pers=pers_flat)
 
     def eval_flat(flat, aux):
         return aux["pers"]
@@ -271,7 +336,8 @@ def run_ditto(engine, rounds=20, tau=5, seed=0, lam=0.75, **kw):
         engine, rounds, tau, seed, aggregate, eval_flat=eval_flat,
         cache_key=("ditto", lam),
         make_aux=lambda flat0, key: {"pers": flat0, "key": key},
-        aux_specs={"pers": engine.client_spec(2), "key": P()})
+        aux_specs={"pers": engine.client_spec(2), "key": P()},
+        participation=participation)
     return _finish(engine, best_flat)
 
 

@@ -104,11 +104,23 @@ class FLEngine:
     def unflatten(self, flat):
         return jax.vmap(self._unravel)(flat)
 
+    def _device_data(self, arr):
+        """Upload a client-stacked data array ONCE: device-resident, and
+        placed on the client mesh axes when the engine is sharded (so
+        passing it as a jit argument neither re-uploads nor reshards)."""
+        a = jnp.asarray(arr)
+        if self.mesh is None:
+            return a
+        return jax.device_put(
+            a, NamedSharding(self.mesh, self.client_spec(a.ndim)))
+
     def _build(self):
         """Builds the raw traceable fns (`train_fn`, `eval_split_fn`,
         `eval_val_fn` — composed into the compiled round engine, DESIGN.md
         §5) and their standalone jitted wrappers (`local_train`,
-        `_eval_split`)."""
+        `_eval_split`), plus the device-resident (mesh-placed) train/val/
+        test arrays — hoisted here so no per-call ``jnp.asarray`` ever
+        re-uploads them at dispatch time."""
         model, opt = self.model, self.opt
         bs = self.batch_size
         loss_fn = self.loss_fn
@@ -143,8 +155,13 @@ class FLEngine:
                 epoch, (params, opt_state), jax.random.split(key, epochs))
             return params, losses.mean()
 
-        train_x = jnp.asarray(self.data.train_x)
-        train_y = jnp.asarray(self.data.train_y)
+        self.train_data = (self._device_data(self.data.train_x),
+                           self._device_data(self.data.train_y))
+        self.val_data = (self._device_data(self.data.val_x),
+                         self._device_data(self.data.val_y))
+        self.test_data = (self._device_data(self.data.test_x),
+                          self._device_data(self.data.test_y))
+        train_x, train_y = self.train_data
 
         def train_fn(stacked, key, epochs):
             N = self.data.n_clients
@@ -171,8 +188,7 @@ class FLEngine:
         self.eval_split_fn = eval_split_fn
         self._eval_split = jax.jit(eval_split_fn)
 
-        val_x = jnp.asarray(self.data.val_x)
-        val_y = jnp.asarray(self.data.val_y)
+        val_x, val_y = self.val_data
 
         def eval_val_fn(stacked):
             return eval_split_fn(stacked, val_x, val_y)
@@ -181,12 +197,10 @@ class FLEngine:
 
     # ------------------------------------------------------------- metrics
     def eval_val(self, stacked):
-        return self._eval_split(stacked, jnp.asarray(self.data.val_x),
-                                jnp.asarray(self.data.val_y))
+        return self._eval_split(stacked, *self.val_data)
 
     def eval_test(self, stacked):
-        return self._eval_split(stacked, jnp.asarray(self.data.test_x),
-                                jnp.asarray(self.data.test_y))
+        return self._eval_split(stacked, *self.test_data)
 
     def make_reward_fn(self):
         """reward(flat_params, k) = -validation loss of client k (Eq. 7)."""

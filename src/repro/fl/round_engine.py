@@ -134,7 +134,8 @@ def make_round_step(engine, *, tau: int,
                     local_train: Optional[Callable] = None,
                     eval_flat: Optional[Callable] = None,
                     hist_len: int = 0,
-                    aux_specs=None):
+                    aux_specs=None,
+                    participation_key: Optional[str] = None):
     """Compile one federated round into ``round_step(state) -> state``.
 
     tau:         local epochs per round (static)
@@ -148,6 +149,15 @@ def make_round_step(engine, *, tau: int,
     hist_len:    >0 writes val accuracy into state.val_hist[t % hist_len]
     aux_specs:   pytree of `PartitionSpec` for state.aux when the engine
                  carries a mesh (default: aux replicates)
+    participation_key: aux key holding a (rounds, N) bool availability
+                 schedule (DESIGN.md §9). Round t trains everyone (the
+                 vmapped update stays SPMD-uniform) but absent clients
+                 HOLD their round-start params via `jnp.where` on the
+                 flattened update; the same row is available to
+                 ``aggregate`` (restricted mixing, realized-comm
+                 counting) through aux. An all-ones schedule selects the
+                 trained params everywhere — bitwise-identical to the
+                 full-participation path on a fixed device layout.
 
     When ``engine.mesh`` is set (`FLEngine.shard_clients`), the jit is
     built with `round_state_shardings` as ``in_shardings``/``out_shardings``
@@ -163,12 +173,18 @@ def make_round_step(engine, *, tau: int,
         stacked = engine.unflatten(state.flat)
         stacked, _ = lt(stacked, jax.random.fold_in(state.key, t),
                         epochs=tau)
+        flat = engine.flatten(stacked)
+        if participation_key is not None:
+            # absent clients hold their round-start params; the schedule
+            # is client-sharded, so the select stays shard-local
+            m = state.aux[participation_key][t]
+            flat = jnp.where(m[:, None], flat, state.flat)
         # barriers: keep the train -> aggregate -> eval stages fusion-
         # isolated so the fused round tracks the staged host loop (and the
         # mesh-sharded build tracks the single-device one) as closely as
         # XLA allows — cross-stage fusion reorders fp accumulation, which
         # the greedy graph decisions amplify (DESIGN.md §8)
-        flat = jax.lax.optimization_barrier(engine.flatten(stacked))
+        flat = jax.lax.optimization_barrier(flat)
         flat, aux = agg(flat, state.aux, t)
         flat = jax.lax.optimization_barrier(flat)
         ev = eval_flat(flat, aux) if eval_flat is not None else flat

@@ -31,7 +31,8 @@ import time  # noqa: E402
 from ..configs.paper_cnn import CONFIG as CNN_CONFIG  # noqa: E402
 from ..core.dpfl import (DPFLConfig, abstract_round_state,  # noqa: E402
                          dpfl_round_step)
-from ..data import make_federated_classification  # noqa: E402
+from ..data import (ParticipationConfig,  # noqa: E402
+                    make_federated_classification)
 from ..fl.engine import FLEngine  # noqa: E402
 from ..models.classifier import PaperCNN  # noqa: E402
 from ..roofline import analyze_compiled  # noqa: E402
@@ -39,9 +40,14 @@ from .mesh import make_client_mesh  # noqa: E402
 
 
 def build_engine_step(n_clients: int, n_train: int, n_val: int, tau: int,
-                      budget: int, pods: int, devices: int):
+                      budget: int, pods: int, devices: int,
+                      participation: float = 1.0,
+                      avail_model: str = "bernoulli"):
     """Client-sharded FLEngine + the cached DPFL round_step + an abstract
-    RoundState, ready to lower."""
+    RoundState, ready to lower. ``participation < 1`` lowers the
+    participation-aware step (availability schedule in aux, restricted
+    mixing/refresh, realized-comm counters — DESIGN.md §9) instead of the
+    schedule-free full-participation program."""
     mesh = make_client_mesh(devices, pods=pods)
     c = CNN_CONFIG
     data = make_federated_classification(
@@ -50,8 +56,10 @@ def build_engine_step(n_clients: int, n_train: int, n_val: int, tau: int,
         n_train=n_train, n_val=n_val, n_test=n_val, noise=1.0)
     engine = FLEngine(PaperCNN(CNN_CONFIG), data, lr=0.01,
                       batch_size=16).shard_clients(mesh)
+    part = None if participation >= 1.0 else ParticipationConfig(
+        rate=participation, model=avail_model)
     cfg = DPFLConfig(rounds=1, tau_train=tau, budget=budget,
-                     track_history=False)
+                     track_history=False, participation=part)
     return dpfl_round_step(engine, cfg), abstract_round_state(engine, cfg), \
         mesh
 
@@ -66,18 +74,24 @@ def main():
     ap.add_argument("--tau", type=int, default=5)
     ap.add_argument("--budget", type=int, default=10)
     ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="availability rate; < 1 lowers the participation-"
+                         "aware round_step (DESIGN.md §9)")
+    ap.add_argument("--avail-model", default="bernoulli",
+                    choices=["bernoulli", "markov", "cluster"])
     ap.add_argument("--out", default="benchmarks/results/dryrun")
     args = ap.parse_args()
     t0 = time.time()
     step, state, mesh = build_engine_step(
         args.clients, args.n_train, args.n_val, args.tau, args.budget,
-        args.pods, args.devices)
+        args.pods, args.devices, args.participation, args.avail_model)
     lowered = step.lower(state)
     compiled = lowered.compile()
     print("memory_analysis:", compiled.memory_analysis())
     rec = {"workload": "dpfl_round_engine_paper_cnn",
            "clients": args.clients, "tau": args.tau, "budget": args.budget,
-           "devices": args.devices, "pods": args.pods, "status": "ok"}
+           "devices": args.devices, "pods": args.pods,
+           "participation": args.participation, "status": "ok"}
     rec.update(analyze_compiled(compiled, mesh.devices.size))
     rec["compile_s"] = time.time() - t0
     rl = rec["roofline"]

@@ -68,7 +68,9 @@ def test_communication_accounting_respects_budget():
     for d in res_p1.comm_downloads:
         assert d <= 6 * budget
     assert sum(res_p2.comm_downloads) <= sum(res_p1.comm_downloads)
-    assert res_p1.comm_preprocess == 6 * 5  # BGGC streams every peer once
+    # BGGC streams every peer in BOTH Algorithm-3 phases (w^Y
+    # accumulation, then batched decisions): 2(N-1) downloads per client
+    assert res_p1.comm_preprocess == 2 * 6 * 5
 
 
 def test_data_rich_client_is_sink_not_source():

@@ -1,0 +1,248 @@
+"""Partial client participation (DESIGN.md §9): the availability models'
+contracts, the participation-aware compiled round_step against (1) the
+full-participation path at rate=1.0 — bitwise on a single device — and
+(2) the host-driven reference loop under real sampling, the hold-vs-drop
+semantics, realized-comm counting, and the sampled baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DPFLConfig, ParticipationConfig, run_dpfl,
+                        run_dpfl_reference)
+from repro.core.graph import mixing_matrix
+from repro.data import (make_federated_classification,
+                        participation_schedule)
+from repro.fl.engine import FLEngine
+from repro.models.classifier import MLP
+
+
+# ---------------------------------------------------- availability models
+
+
+@settings(max_examples=10, deadline=None)
+@given(rounds=st.integers(1, 30), n=st.integers(1, 20),
+       rate=st.floats(0.0, 1.0), seed=st.integers(0, 100),
+       model=st.sampled_from(["bernoulli", "markov", "cluster"]))
+def test_schedule_shape_dtype_determinism(rounds, n, rate, seed, model):
+    cfg = ParticipationConfig(rate=rate, model=model, seed=seed)
+    cluster = np.arange(n) % 3
+    a = participation_schedule(cfg, rounds, n, cluster=cluster)
+    b = participation_schedule(cfg, rounds, n, cluster=cluster)
+    assert a.shape == (rounds, n) and a.dtype == bool
+    np.testing.assert_array_equal(a, b)  # seeded determinism
+
+
+@pytest.mark.parametrize("model", ["bernoulli", "markov", "cluster"])
+def test_schedule_rate_boundaries(model):
+    """Every model's contract: rate=1.0 -> all ones (the bitwise-identity
+    premise), rate=0.0 -> all zeros."""
+    cluster = np.arange(12) % 4
+    ones = participation_schedule(
+        ParticipationConfig(rate=1.0, model=model, seed=3), 20, 12,
+        cluster=cluster)
+    zeros = participation_schedule(
+        ParticipationConfig(rate=0.0, model=model, seed=3), 20, 12,
+        cluster=cluster)
+    assert ones.all() and not zeros.any()
+
+
+@pytest.mark.parametrize("model", ["bernoulli", "markov", "cluster"])
+def test_schedule_stationary_rate(model):
+    cluster = np.arange(40) % 8
+    sched = participation_schedule(
+        ParticipationConfig(rate=0.7, model=model, seed=0), 400, 40,
+        cluster=cluster)
+    assert abs(sched.mean() - 0.7) < 0.05
+
+
+def test_markov_is_burstier_than_bernoulli():
+    """The Markov chain's point: at the same stationary rate, outages come
+    in spells — consecutive rounds are positively correlated, so the
+    per-client flip count is well below the i.i.d. schedule's."""
+    n, rounds, rate = 16, 300, 0.6
+    mk = participation_schedule(
+        ParticipationConfig(rate=rate, model="markov", seed=1,
+                            mean_burst=8.0), rounds, n)
+    bn = participation_schedule(
+        ParticipationConfig(rate=rate, model="bernoulli", seed=1),
+        rounds, n)
+    flips = lambda s: (s[1:] != s[:-1]).mean()
+    assert flips(mk) < 0.5 * flips(bn)
+    assert abs(mk.mean() - rate) < 0.1
+
+
+def test_cluster_outages_are_correlated():
+    """Members of a cluster share availability round for round."""
+    cluster = np.repeat(np.arange(4), 5)
+    sched = participation_schedule(
+        ParticipationConfig(rate=0.5, model="cluster", seed=2), 50, 20,
+        cluster=cluster)
+    for c in range(4):
+        members = sched[:, cluster == c]
+        assert (members == members[:, :1]).all()
+    # distinct clusters do differ somewhere
+    assert not (sched[:, 0] == sched[:, 5]).all()
+
+
+def test_participation_config_validation():
+    with pytest.raises(ValueError):
+        ParticipationConfig(rate=1.5)
+    with pytest.raises(ValueError):
+        ParticipationConfig(model="lunar")
+    with pytest.raises(ValueError):
+        ParticipationConfig(mean_burst=0.5)
+    with pytest.raises(ValueError):
+        participation_schedule(
+            ParticipationConfig(model="cluster"), 4, 8, cluster=None)
+
+
+# ------------------------------------------------------- restricted mixing
+
+
+def test_mixing_matrix_active_restriction():
+    key = jax.random.PRNGKey(0)
+    adj = jax.random.bernoulli(key, 0.6, (6, 6))
+    p = jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (6,))) + 0.1
+    p = p / p.sum()
+    active = jnp.array([True, False, True, True, False, True])
+    A = np.asarray(mixing_matrix(adj, p, active=active))
+    # absent clients hold: their row is e_k
+    for k in (1, 4):
+        np.testing.assert_allclose(A[k], np.eye(6)[k], atol=1e-7)
+    # nobody receives from an absent peer, and rows renormalize
+    assert (A[:, 1] == np.eye(6)[:, 1]).all()
+    np.testing.assert_allclose(A.sum(1), 1.0, atol=1e-6)
+    # an all-ones mask is the full-participation matrix, bitwise
+    np.testing.assert_array_equal(
+        np.asarray(mixing_matrix(adj, p, active=jnp.ones(6, bool))),
+        np.asarray(mixing_matrix(adj, p)))
+
+
+# ------------------------------------------------------ DPFL round engine
+
+
+@pytest.fixture(scope="module")
+def small_setting():
+    data = make_federated_classification(
+        seed=5, n_clients=6, n_clusters=2, partition="pathological",
+        classes_per_client=3, feature_dim=8, n_train=16, n_val=16,
+        n_test=16, noise=2.0, assign_level="cluster")
+    return FLEngine(MLP(8, 16, 10), data, lr=0.05, batch_size=8)
+
+
+_KW = dict(rounds=4, tau_init=2, tau_train=1, budget=3, seed=0)
+
+
+@pytest.mark.parametrize("model", ["bernoulli", "markov", "cluster"])
+def test_full_participation_is_bitwise_identical(small_setting, model):
+    """Acceptance: at rate=1.0 (any availability model) the participation-
+    aware round_step reproduces the schedule-free path BITWISE on a single
+    device — the masks multiply/select by exact values only."""
+    eng = small_setting
+    base = run_dpfl(eng, DPFLConfig(**_KW))
+    part = run_dpfl(eng, DPFLConfig(
+        **_KW, participation=ParticipationConfig(rate=1.0, model=model)))
+    assert part.participation.all()
+    assert part.comm_downloads == base.comm_downloads
+    assert part.comm_preprocess == base.comm_preprocess
+    np.testing.assert_array_equal(part.test_acc, base.test_acc)
+    np.testing.assert_array_equal(part.best_flat, base.best_flat)
+    for a, b in zip(part.graph_history, base.graph_history):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(part.val_acc_history, base.val_acc_history):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("model,rate", [("bernoulli", 0.5),
+                                        ("markov", 0.6),
+                                        ("cluster", 0.5)])
+def test_engine_matches_reference_under_sampling(small_setting, model, rate):
+    """The compiled participation-aware round_step reproduces the
+    host-driven reference loop under real sampling: same schedule, same
+    restricted graphs, same realized comm counters, same accuracies."""
+    eng = small_setting
+    cfg = DPFLConfig(**_KW, participation=ParticipationConfig(
+        rate=rate, model=model, seed=11))
+    new = run_dpfl(eng, cfg)
+    ref = run_dpfl_reference(eng, cfg)
+    np.testing.assert_array_equal(new.participation, ref.participation)
+    assert new.comm_downloads == ref.comm_downloads
+    assert new.comm_preprocess == ref.comm_preprocess
+    for a, b in zip(new.graph_history, ref.graph_history):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(new.val_acc_history, ref.val_acc_history):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+    np.testing.assert_allclose(new.test_acc, ref.test_acc, atol=1e-6)
+
+
+def test_absent_clients_hold_and_comm_is_realized(small_setting):
+    """Hold semantics + realized-comm accounting: with nobody available
+    nothing trains, mixes or downloads; with sampling, every round's
+    count is bounded by the available downloader/peer pairs of Omega."""
+    eng = small_setting
+    zero = run_dpfl(eng, DPFLConfig(**_KW, participation=ParticipationConfig(
+        rate=0.0)))
+    assert zero.comm_downloads == [0] * _KW["rounds"]
+    # params never move after preprocessing: every round evaluates the
+    # same held models, so the graph never changes either
+    for adj in zero.graph_history:
+        np.testing.assert_array_equal(adj, np.asarray(zero.omega))
+    half = run_dpfl(eng, DPFLConfig(**_KW, participation=ParticipationConfig(
+        rate=0.5, seed=4)))
+    full = run_dpfl(eng, DPFLConfig(**_KW))
+    omega = np.asarray(full.omega)
+    off = omega.copy()
+    np.fill_diagonal(off, False)
+    for t, d in enumerate(half.comm_downloads):
+        act = half.participation[t]
+        realized_cap = int((off & act[:, None] & act[None, :]).sum())
+        assert d <= realized_cap <= full.comm_downloads[t]
+    # absent clients' graph rows are frozen round over round
+    prev = np.asarray(half.omega)
+    for t, adj in enumerate(half.graph_history):
+        absent = ~half.participation[t]
+        np.testing.assert_array_equal(np.asarray(adj)[absent], prev[absent])
+        prev = np.asarray(adj)
+
+
+def test_random_graph_participation_engine_matches_reference(small_setting):
+    eng = small_setting
+    cfg = DPFLConfig(rounds=3, tau_init=2, tau_train=1, budget=3, seed=0,
+                     random_graph=True,
+                     participation=ParticipationConfig(rate=0.5, seed=9))
+    new = run_dpfl(eng, cfg)
+    ref = run_dpfl_reference(eng, cfg)
+    assert new.comm_downloads == ref.comm_downloads
+    np.testing.assert_allclose(new.test_acc, ref.test_acc, atol=1e-6)
+
+
+# ------------------------------------------------------ sampled baselines
+
+
+def test_baselines_under_sampling(small_setting):
+    """FedAvg/APFL/Ditto accept a participation config: rate=1.0
+    reproduces the unsampled run (the masked average divides by
+    sum(p)~1), rate=0.0 never trains (test acc equals the evaluated
+    init), and sampling runs end to end."""
+    from repro.fl.baselines import run_apfl, run_ditto, run_fedavg
+    eng = small_setting
+    for fn in (run_fedavg, run_apfl, run_ditto):
+        base = fn(eng, rounds=2, tau=1, seed=0)
+        full = fn(eng, rounds=2, tau=1, seed=0,
+                  participation=ParticipationConfig(rate=1.0))
+        np.testing.assert_allclose(full["test_acc"], base["test_acc"],
+                                   atol=1e-6)
+        half = fn(eng, rounds=2, tau=1, seed=0,
+                  participation=ParticipationConfig(rate=0.5, seed=7))
+        assert half["test_acc"].shape == base["test_acc"].shape
+
+    # rate=0: params never leave the init — FedAvg's best-val model is
+    # the initial model for every client
+    frozen = run_fedavg(eng, rounds=2, tau=1, seed=0,
+                        participation=ParticipationConfig(rate=0.0))
+    init = eng.init_clients(jax.random.PRNGKey(0))
+    acc0, _ = eng.eval_test(init)
+    np.testing.assert_allclose(frozen["test_acc"], np.asarray(acc0),
+                               atol=1e-6)

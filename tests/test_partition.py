@@ -28,6 +28,47 @@ def test_pathological_exactly_k_classes(n_clients, n_classes, k, seed):
     assert (a.sum(1) == min(k, n_classes)).all()
 
 
+@settings(max_examples=20, deadline=None)
+@given(n_clients=st.integers(1, 20), n_classes=st.integers(1, 15),
+       excess=st.integers(1, 10), seed=st.integers(0, 1000))
+def test_pathological_rejects_impossible_k(n_clients, n_classes, excess,
+                                           seed):
+    """Regression (hang): k > n_classes used to spin forever in the
+    distinct-class refill loop; k < 1 is equally meaningless. Both must
+    raise immediately, for ANY such inputs."""
+    import pytest
+    rng = np.random.default_rng(seed)
+    with pytest.raises(ValueError):
+        pathological_assignment(rng, n_clients, n_classes,
+                                n_classes + excess)
+    with pytest.raises(ValueError):
+        pathological_assignment(rng, n_clients, n_classes, 0)
+
+
+def test_size_p_mode_matches_actual_effective_samples():
+    """Config coherence: p_mode="size" must derive the Eq.-4 weights from
+    the data the clients actually hold — p_k equals client k's distinct
+    train-sample count over the total (the remaining rows are
+    with-replacement refills of those samples)."""
+    from repro.data import make_federated_classification
+    n_train = 48
+    d = make_federated_classification(seed=3, n_clients=6, n_train=n_train,
+                                      n_val=8, n_test=8, feature_dim=4,
+                                      p_mode="size")
+    uniq = np.array([
+        np.unique(d.train_x[i].reshape(n_train, -1), axis=0).shape[0]
+        for i in range(6)])
+    assert uniq.min() >= max(1, n_train // 4) and uniq.max() <= n_train
+    assert uniq.min() < n_train  # sizes actually vary for this seed
+    np.testing.assert_allclose(d.p, uniq / uniq.sum(), atol=1e-12)
+    # every refilled row is a copy of one of the client's distinct samples
+    for i in range(6):
+        rows = d.train_x[i].reshape(n_train, -1)
+        base = np.unique(rows, axis=0)
+        for r in rows:
+            assert (np.abs(base - r).sum(1) < 1e-12).any()
+
+
 @settings(max_examples=15, deadline=None)
 @given(n=st.integers(50, 400), n_clients=st.integers(2, 10),
        n_classes=st.integers(2, 10), alpha=st.floats(0.05, 5.0),

@@ -98,6 +98,21 @@ def test_round_step_comm_matches_host_loop(small_setting, refresh_period):
     np.testing.assert_allclose(new.test_acc, ref.test_acc, atol=1e-6)
 
 
+def test_bggc_preprocess_counts_both_phases(small_setting):
+    """Comm-accounting audit (vs the paper's cost model): `make_bggc`
+    streams every peer in BOTH Algorithm-3 phases — once accumulating the
+    shrink-set sum w^Y, once for the batched decisions (a client holds at
+    most B_c models, so the decision batches must be re-received) — so
+    preprocessing charges 2(N-1) downloads per client, identically for
+    the compiled engine and the host reference."""
+    eng = small_setting
+    cfg = DPFLConfig(rounds=1, tau_init=1, tau_train=1, budget=3, seed=0)
+    new = run_dpfl(eng, cfg)
+    ref = run_dpfl_reference(eng, cfg)
+    N = _TOY_N
+    assert new.comm_preprocess == ref.comm_preprocess == 2 * N * (N - 1)
+
+
 def test_random_graph_comm_accounting(small_setting):
     """Fig.-3 ablation comm accounting: preprocessing only downloads the
     `budget` sampled peers per client (N * budget, NOT the BGGC's
