@@ -1,0 +1,135 @@
+"""Compression benchmark: rounds/sec, wire bytes and accuracy of the
+compiled DPFL round engine across codec x rate (DESIGN.md §11).
+
+  PYTHONPATH=src python -m benchmarks.bench_compression
+  PYTHONPATH=src python -m benchmarks.bench_compression --smoke --mesh
+
+Cells: the compression-free path, the `identity` codec (which must match
+it EXACTLY — identity normalizes to the same compiled step, and the
+smoke asserts the results are equal), `topk` over ``--topk-fracs`` and
+`int8` over ``--quant-bits-sweep``. Each cell reports rounds/sec, total
+downloads, total wire bytes (preprocess included, charged at the raw
+fp32 rate) and mean test accuracy; the JSON also carries the
+accuracy-vs-bytes frontier — the Pareto set of (bytes_total,
+test_acc_mean) cells, the curve the paper's communication-efficiency
+claim lives on. ``--mesh`` shards the client axis over all visible
+devices (launch with XLA_FLAGS=--xla_force_host_platform_device_count=K
+set before the jax import, as the CI smoke does). Writes
+``benchmarks/results/BENCH_compression.json``.
+"""
+import argparse
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = os.path.join(ROOT, "benchmarks", "results")
+
+
+def frontier(rows):
+    """Pareto points of (bytes_total, test_acc_mean): cheapest-first,
+    keep a cell only if it beats every cheaper cell's accuracy."""
+    pts, best = [], float("-inf")
+    for r in sorted(rows, key=lambda r: (r["bytes_total"],
+                                         -r["test_acc_mean"])):
+        if r["test_acc_mean"] > best:
+            best = r["test_acc_mean"]
+            pts.append({"codec": r["codec"], "param": r["param"],
+                        "bytes_total": r["bytes_total"],
+                        "test_acc_mean": r["test_acc_mean"]})
+    return pts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--topk-fracs", default="0.25,0.1,0.05")
+    ap.add_argument("--quant-bits-sweep", default="8,4")
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--budget", type=int, default=4)
+    ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the client axis over all visible devices")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI sizes (also asserts the identity cell "
+                         "matches the compression-free path exactly)")
+    ap.add_argument("--out", default=os.path.join(
+        OUT, "BENCH_compression.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        args.rounds, args.clients, args.tau, args.budget = 3, 8, 1, 3
+        args.topk_fracs, args.quant_bits_sweep = "0.25", "8"
+
+    import jax
+    import numpy as np
+
+    from benchmarks.bench_participation import time_run
+    from benchmarks.common import standard_setting
+    from repro.core import CompressionConfig, DPFLConfig, run_dpfl
+    from repro.fl import compress as _compress
+    from repro.launch.mesh import make_client_mesh
+
+    _, _, engine = standard_setting(n_clients=args.clients)
+    devices = 1
+    if args.mesh:
+        devices = len(jax.devices())
+        engine.shard_clients(make_client_mesh(devices))
+    kw = dict(tau_init=2, tau_train=args.tau, budget=args.budget, seed=0,
+              track_history=False)
+
+    def run(rounds, comp=None):
+        return run_dpfl(engine, DPFLConfig(rounds=rounds, compression=comp,
+                                           **kw))
+
+    cells = [("none", None, None), ("identity", None,
+                                    CompressionConfig("identity"))]
+    for f in args.topk_fracs.split(","):
+        cells.append(("topk", float(f),
+                      CompressionConfig("topk", topk_frac=float(f))))
+    for b in args.quant_bits_sweep.split(","):
+        cells.append(("int8", int(b),
+                      CompressionConfig("int8", quant_bits=int(b))))
+
+    rows = []
+    base_res = None
+    # timing uses >= 16 dispatches so the per-round cost dominates the
+    # preprocess-subtraction noise, whatever the reported sweep size is
+    t_rounds = max(args.rounds, 16)
+    print("codec,param,rounds_per_s,comm_total,bytes_total,test_acc_mean")
+    for codec, param, comp in cells:
+        rps = time_run(lambda r, c=comp: run(r, c), t_rounds)
+        res = run(args.rounds, comp)
+        bytes_total = sum(res.comm_bytes) + res.comm_bytes_preprocess
+        row = {"codec": codec, "param": param, "rounds_per_s": rps,
+               "comm_total": int(sum(res.comm_downloads)),
+               "bytes_total": int(bytes_total),
+               "bytes_per_model": _compress.bytes_per_model(
+                   comp, engine.n_params),
+               "test_acc_mean": float(res.test_acc.mean())}
+        rows.append(row)
+        print(f"{codec},{param},{rps:.3f},{row['comm_total']},"
+              f"{row['bytes_total']},{row['test_acc_mean']:.4f}")
+        if codec == "none":
+            base_res = res
+        if args.smoke and codec == "identity":
+            # the identity codec IS the compression-free path: same
+            # compiled step, equal results, equal byte accounting
+            np.testing.assert_array_equal(res.test_acc, base_res.test_acc)
+            assert res.comm_downloads == base_res.comm_downloads
+            assert res.comm_bytes == base_res.comm_bytes
+            assert res.comm_bytes_preprocess == \
+                base_res.comm_bytes_preprocess
+            print("smoke: identity == compression-free path ok")
+
+    rec = {"workload": "dpfl_compression_sweep", "clients": args.clients,
+           "rounds": args.rounds, "budget": args.budget, "tau": args.tau,
+           "n_params": engine.n_params, "devices": devices,
+           "mesh": bool(args.mesh), "rows": rows,
+           "frontier": frontier(rows)}
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        json.dump(rec, open(args.out, "w"), indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""CI perf regression gate for the DPFL round engine.
+
+  python -m benchmarks.check_regression \
+      --fresh /tmp/BENCH_dpfl_fresh.json \
+      --committed benchmarks/results/BENCH_dpfl.json --tolerance 0.30
+
+Compares a fresh ``perf_hillclimb --dpfl --smoke`` run against the
+committed ``BENCH_dpfl.json``. Absolute rounds/sec are machine-dependent
+(the committed numbers come from a dev container; CI runs on whatever
+runner GitHub hands out), so the gate checks TWO signals and fails only
+when BOTH regress beyond the tolerance:
+
+  1. ``speedup`` — round_engine / host_loop rounds/sec. Both paths run
+     on the same machine in the same process, so the ratio normalizes
+     machine speed; it is the metric the compiled round engine exists to
+     win, and a change that slows the engine (e.g. a compression hook
+     leaking into the identity path) shows up here on any hardware.
+  2. ``round_engine_rounds_per_s`` — the absolute engine throughput, so
+     a runner that is simply faster across the board (which deflates the
+     ratio by speeding the host loop more) cannot fail the gate
+     spuriously.
+
+Documented tolerance: a >30% drop (``--tolerance 0.30``) on BOTH
+metrics fails the job. Exit code 1 on regression.
+"""
+import argparse
+import json
+import sys
+
+
+def check(fresh: dict, committed: dict, tolerance: float) -> bool:
+    """True when the fresh run passes the gate."""
+    ok = True
+    print("metric,committed,fresh,ratio,floor")
+    regressed = []
+    for metric in ("speedup", "round_engine_rounds_per_s"):
+        old, new = committed[metric], fresh[metric]
+        ratio = new / old
+        floor = 1.0 - tolerance
+        print(f"{metric},{old:.3f},{new:.3f},{ratio:.3f},{floor:.2f}")
+        if ratio < floor:
+            regressed.append(metric)
+    if len(regressed) == len(("speedup", "round_engine_rounds_per_s")):
+        print(f"FAIL: >{tolerance:.0%} regression on both the machine-"
+              f"normalized speedup and the absolute engine rounds/sec")
+        ok = False
+    elif regressed:
+        print(f"warn: {regressed[0]} regressed beyond {tolerance:.0%} but "
+              f"the other metric held — attributing to runner variance")
+    else:
+        print("ok: no regression beyond tolerance")
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--committed", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.30)
+    args = ap.parse_args()
+    fresh = json.load(open(args.fresh))
+    committed = json.load(open(args.committed))
+    for rec, name in ((fresh, "fresh"), (committed, "committed")):
+        if rec.get("workload") != "dpfl_round_loop":
+            sys.exit(f"{name} record is not a dpfl_round_loop benchmark")
+    if (fresh["rounds"], fresh["clients"]) != (committed["rounds"],
+                                               committed["clients"]):
+        sys.exit("fresh and committed runs used different sizes: "
+                 f"{fresh['rounds']}x{fresh['clients']} vs "
+                 f"{committed['rounds']}x{committed['clients']}")
+    if not check(fresh, committed, args.tolerance):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -69,11 +69,14 @@ def run_variant(arch, shape, mesh, tag, opts):
     return json.load(open(fn))
 
 
-def bench_dpfl_rounds(rounds=10, n_clients=16, repeats=2):
+def bench_dpfl_rounds(rounds=10, n_clients=16, repeats=2, out=None):
     """rounds/sec: host-driven reference loop vs compiled round engine.
     Preprocessing (shared) is excluded by timing whole runs minus a
     0-round run; track_history=False keeps the new path device-resident.
-    Writes the ``BENCH_dpfl.json`` summary for the bench trajectory."""
+    Writes the ``BENCH_dpfl.json`` summary for the bench trajectory
+    (``out`` overrides the path — the CI regression gate writes a fresh
+    copy next to the committed one and compares via
+    `benchmarks.check_regression`)."""
     from repro.core import DPFLConfig, run_dpfl, run_dpfl_reference
     from benchmarks.common import standard_setting
 
@@ -101,7 +104,7 @@ def bench_dpfl_rounds(rounds=10, n_clients=16, repeats=2):
     print(f"dpfl,speedup,ok,,{new / ref:.2f}x,,,,")
     results_dir = os.path.join(ROOT, "benchmarks", "results")
     os.makedirs(results_dir, exist_ok=True)
-    fn = os.path.join(results_dir, "BENCH_dpfl.json")
+    fn = out or os.path.join(results_dir, "BENCH_dpfl.json")
     json.dump({"workload": "dpfl_round_loop", "rounds": rounds,
                "clients": n_clients,
                "host_loop_rounds_per_s": ref,
@@ -186,17 +189,26 @@ def main():
                     help=argparse.SUPPRESS)
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --dpfl: the committed BENCH_dpfl.json "
+                         "sizes (rounds=8, clients=12) — what the CI "
+                         "regression gate runs")
+    ap.add_argument("--out", default=None,
+                    help="with --dpfl: override the BENCH_dpfl.json path")
     args = ap.parse_args()
     if args.dpfl_mesh_worker:
         bench_dpfl_mesh_worker(args.rounds, args.clients, args.devices)
         return
     if args.dpfl:
+        if args.smoke:
+            args.rounds, args.clients = 8, 12
         if args.mesh:
             counts = tuple(int(d) for d in args.device_counts.split(","))
             bench_dpfl_mesh(rounds=args.rounds, n_clients=args.clients,
                             device_counts=counts)
         else:
-            bench_dpfl_rounds(rounds=args.rounds, n_clients=args.clients)
+            bench_dpfl_rounds(rounds=args.rounds, n_clients=args.clients,
+                              out=args.out)
         return
     os.makedirs(OUT, exist_ok=True)
     print("pair,tag,status,compute_s,memory_s,collective_s,dominant,"

@@ -5,6 +5,7 @@ dpfl.py  — the alternating-minimization driver (Alg. 1)
 distributed.py — cross-pod DPFL mixing on the production mesh
 """
 from ..data.availability import ParticipationConfig
+from ..fl.compress import CompressionConfig
 from .dpfl import (DPFLConfig, DPFLResult, abstract_round_state,
                    dpfl_round_step, graph_stats, run_dpfl,
                    run_dpfl_reference)
@@ -15,6 +16,7 @@ from .graph import (GreedyCarry, all_clients_bggc, all_clients_graph,
 
 __all__ = [
     "DPFLConfig", "DPFLResult", "ParticipationConfig",
+    "CompressionConfig",
     "run_dpfl", "run_dpfl_reference",
     "graph_stats", "dpfl_round_step", "abstract_round_state",
     "GreedyCarry", "greedy_decision_step",

@@ -33,6 +33,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as PSpec
 
 from ..data.availability import ParticipationConfig, schedule_for_data
+from ..fl import compress as _compress
+from ..fl.compress import CompressionConfig
 from ..fl.engine import FLEngine
 from ..fl.round_engine import (RoundState, init_round_state, make_round_step,
                                run_rounds, shard_round_state)
@@ -62,6 +64,16 @@ class DPFLConfig:
     # only realized downloads. None = full participation (the schedule-
     # free compiled path). Preprocessing (tau_init + BGGC) runs before
     # the schedule starts and always sees every client.
+    compression: Optional[CompressionConfig] = None
+    # peer-exchange codec (DESIGN.md §11): lossy codecs transmit
+    # C(x_k + e_k) — error-feedback residuals ride client-sharded in
+    # aux["ef"] — receivers mix DECODED peers (self term exact), the GGC
+    # refresh probes decoded peers, and byte accounting charges the
+    # codec's wire size per realized download. None and the `identity`
+    # codec are the SAME traced program (bitwise; identity normalizes
+    # away before tracing). Preprocessing exchanges raw fp32 models (the
+    # candidate graph is built on full-fidelity models, before any EF
+    # state exists) and is charged at the raw rate.
 
 @dataclass
 class DPFLResult:
@@ -81,6 +93,12 @@ class DPFLResult:
     # clients under partial participation
     comm_downloads: list = field(default_factory=list)  # per-round totals
     comm_preprocess: int = 0
+    # byte-level accounting (DESIGN.md §11): every download moves one
+    # encoded model, so bytes = downloads x the codec's static wire size
+    # (`compress.bytes_per_model`) — exact python-int arithmetic at any
+    # scale. Preprocessing moved raw fp32 models and is charged 4P each.
+    comm_bytes: list = field(default_factory=list)      # per-round totals
+    comm_bytes_preprocess: int = 0
     participation: Optional[np.ndarray] = None  # (rounds, N) realized
     #                                             schedule, if enabled
 
@@ -112,6 +130,25 @@ def _comm_preprocess(cfg: DPFLConfig, N: int, budget: int) -> int:
     if cfg.random_graph:
         return N * min(budget, N - 1)
     return 2 * N * (N - 1)
+
+
+def _fill_comm_bytes(result: DPFLResult, cfg: DPFLConfig, n_params: int):
+    """Download counts -> bytes, shared verbatim by the compiled engine
+    and the host reference so the two accountings cannot drift: training
+    rounds move one codec-encoded model per realized download,
+    preprocessing moved raw fp32 models (DESIGN.md §11)."""
+    bpm = _compress.bytes_per_model(cfg.compression, n_params)
+    result.comm_bytes = [int(d) * bpm for d in result.comm_downloads]
+    result.comm_bytes_preprocess = result.comm_preprocess * 4 * n_params
+
+
+def _comp_base_key(seed: int) -> jax.Array:
+    """Base key of the codec's stochastic-rounding stream (round t folds
+    it with t): branched off the run seed on a constant the preprocessing
+    split never touches, so enabling compression changes no existing PRNG
+    stream. Rides in aux["k_comp"] — never a closure constant — so the
+    compiled step stays reusable across runs."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), 977)
 
 
 def _cached_bggc(engine: FLEngine, cfg: DPFLConfig, reward_fn, budget: int):
@@ -200,16 +237,38 @@ def _make_dpfl_aggregate(engine: FLEngine, cfg: DPFLConfig, reward_fn,
     among AVAILABLE candidates in Omega_k and absent clients keep their
     previous C_k; the Eq.-4 matrix is row/col-restricted to available
     peers and renormalized; comm counters count only realized downloads.
+
+    With a lossy ``cfg.compression`` (DESIGN.md §11), what peers exchange
+    is the codec payload of the error-compensated models C(x + e): the
+    GGC refresh probes the DECODED peer models (one download serves both
+    probe and mix), the Eq.-4 off-diagonal term mixes decoded payloads —
+    top-k through the `compressed_graph_mix` kernel, never densified for
+    the mix — while the self term stays exact, and the EF residuals
+    update in client-sharded aux["ef"] (absent clients transmit nothing,
+    so their residuals hold). The `identity` codec normalizes to None and
+    this function emits the exact pre-compression trace.
     """
     p = engine.p
     mesh, ca = engine.mesh, engine.client_axes
     part = cfg.participation is not None
+    comp = _compress.normalize(cfg.compression)
+    ef = comp is not None and _compress.uses_ef(comp)
 
     def aggregate(flat, aux, t):
         adj = aux["adj"]
         omega = aux["omega"]
         N = adj.shape[0]
         active = aux["part"][t] if part else None
+        if comp is None:
+            probe_w, payload, dec, new_ef = flat, None, None, None
+        else:
+            payload, dec, new_ef = _compress.compress_exchange(
+                comp, flat, aux["ef"] if ef else None,
+                jax.random.fold_in(aux["k_comp"], t))
+            probe_w = dec
+            if ef and part:
+                # an absent client transmits nothing: its residual holds
+                new_ef = jnp.where(active[:, None], new_ef, aux["ef"])
         if cfg.random_graph:
             new_adj = adj  # Omega is the (fixed, random) graph
             comm_t = (_realized_downloads(adj, active) if part
@@ -243,12 +302,19 @@ def _make_dpfl_aggregate(engine: FLEngine, cfg: DPFLConfig, reward_fn,
                         omega, reward_fn, budget, impl=cfg.graph_impl,
                         mix_impl=cfg.mix_impl, mesh=mesh, client_axes=ca)
             new_adj = jax.lax.cond(refresh, do_refresh, lambda f: adj,
-                                   flat)
+                                   probe_w)
         A = mixing_matrix(new_adj, p, active=active)
-        mixed = mix_flat(A, flat, impl=cfg.mix_impl, mesh=mesh,
-                         client_axes=ca)
+        if comp is None:
+            mixed = mix_flat(A, flat, impl=cfg.mix_impl, mesh=mesh,
+                             client_axes=ca)
+        else:
+            mixed = _compress.mix_compressed(
+                comp, A, flat, payload, dec, impl=cfg.mix_impl, mesh=mesh,
+                client_axes=ca)
         aux = dict(aux, adj=new_adj,
                    comm=aux["comm"].at[t].set(comm_t.astype(jnp.int32)))
+        if ef:
+            aux["ef"] = new_ef
         if hist_len:
             aux["graph_hist"] = aux["graph_hist"].at[t % hist_len].set(
                 new_adj)
@@ -258,10 +324,11 @@ def _make_dpfl_aggregate(engine: FLEngine, cfg: DPFLConfig, reward_fn,
 
 
 def _dpfl_aux_specs(engine: FLEngine, hist_len: int,
-                    participation: bool = False):
+                    participation: bool = False, comp=None):
     """PartitionSpecs for the DPFL aux pytree on the client mesh: the
-    adjacency, Omega, graph history and the participation schedule shard
-    their client axis; the graph key and comm counters replicate."""
+    adjacency, Omega, graph history, the participation schedule and the
+    error-feedback residuals shard their client axis; the graph and codec
+    keys and the comm counters replicate."""
     if engine.mesh is None:
         return None
     ca = tuple(engine.client_axes)
@@ -271,6 +338,10 @@ def _dpfl_aux_specs(engine: FLEngine, hist_len: int,
         specs["graph_hist"] = PSpec(None, ca, None)
     if participation:
         specs["part"] = PSpec(None, ca)
+    if comp is not None:
+        specs["k_comp"] = PSpec()
+        if _compress.uses_ef(comp):
+            specs["ef"] = PSpec(ca, None)
     return specs
 
 
@@ -284,8 +355,9 @@ def _cached_round_step(engine: FLEngine, cfg: DPFLConfig, budget: int,
     if cache is None:
         cache = engine._dpfl_round_step_cache = {}
     part = cfg.participation is not None
+    comp = _compress.normalize(cfg.compression)
     key = (cfg.tau_train, cfg.refresh_period, cfg.random_graph,
-           cfg.graph_impl, cfg.mix_impl, budget, hist_len, part,
+           cfg.graph_impl, cfg.mix_impl, budget, hist_len, part, comp,
            engine.mesh, engine.client_axes)
     if key not in cache:
         reward_fn = engine.make_reward_fn()
@@ -294,7 +366,7 @@ def _cached_round_step(engine: FLEngine, cfg: DPFLConfig, budget: int,
         cache[key] = make_round_step(
             engine, tau=cfg.tau_train, aggregate=aggregate,
             hist_len=hist_len,
-            aux_specs=_dpfl_aux_specs(engine, hist_len, part),
+            aux_specs=_dpfl_aux_specs(engine, hist_len, part, comp),
             participation_key="part" if part else None)
     return cache[key]
 
@@ -322,6 +394,11 @@ def run_dpfl(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
                                   engine.data)
         aux["part"] = jnp.asarray(sched)
         result.participation = np.asarray(sched)
+    comp = _compress.normalize(cfg.compression)
+    if comp is not None:
+        aux["k_comp"] = _comp_base_key(cfg.seed)
+        if _compress.uses_ef(comp):
+            aux["ef"] = jnp.zeros_like(flat)
     round_step = _cached_round_step(engine, cfg, budget, hist_len)
     state = init_round_state(flat, k_train, hist_len=hist_len, aux=aux)
     if engine.mesh is not None:
@@ -330,7 +407,8 @@ def run_dpfl(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
         state = shard_round_state(
             state, engine.mesh, engine.client_axes,
             aux_specs=_dpfl_aux_specs(engine, hist_len,
-                                      cfg.participation is not None))
+                                      cfg.participation is not None,
+                                      comp))
 
     def flush_histories(st, k):
         # the ONLY host transfers: every hist_len rounds + once at the end
@@ -343,6 +421,7 @@ def run_dpfl(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
         flush_every=hist_len if (hist_len and cfg.history_every) else 0)
 
     result.comm_downloads = [int(c) for c in np.asarray(state.aux["comm"])]
+    _fill_comm_bytes(result, cfg, engine.n_params)
     best = engine.unflatten(state.best_flat)
     test_acc, _ = engine.eval_test(best)
     result.test_acc = np.asarray(test_acc)
@@ -373,6 +452,10 @@ def run_dpfl_reference(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
         sched = schedule_for_data(cfg.participation, cfg.rounds,
                                   engine.data)
         result.participation = np.asarray(sched)
+    comp = _compress.normalize(cfg.compression)
+    use_ef = comp is not None and _compress.uses_ef(comp)
+    ef = jnp.zeros_like(flat) if use_ef else None
+    k_comp = _comp_base_key(cfg.seed) if comp is not None else None
 
     for t in range(cfg.rounds):
         prev_flat = flat
@@ -384,6 +467,16 @@ def run_dpfl_reference(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
             # absent clients hold their round-start params
             active = jnp.asarray(sched[t])
             flat = jnp.where(active[:, None], flat, prev_flat)
+        probe_w, payload, dec = flat, None, None
+        if comp is not None:
+            # peers exchange the codec payload of C(x + e); the refresh
+            # probes and the mix both consume it (DESIGN.md §11)
+            payload, dec, new_ef = _compress.compress_exchange(
+                comp, flat, ef, jax.random.fold_in(k_comp, t))
+            probe_w = dec
+            if use_ef:
+                ef = new_ef if active is None else \
+                    jnp.where(active[:, None], new_ef, ef)
         refresh = (not cfg.random_graph) and (t % cfg.refresh_period == 0)
         count_graph = omega if (refresh or cfg.random_graph) else adj
         if active is None:
@@ -397,13 +490,17 @@ def run_dpfl_reference(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
         elif refresh:
             cand = omega if active is None else omega & active[None, :]
             refreshed = all_clients_graph(
-                jax.random.fold_in(k_graph, 1000 + t), flat, p, cand,
+                jax.random.fold_in(k_graph, 1000 + t), probe_w, p, cand,
                 reward_fn, budget, impl=cfg.graph_impl,
                 mix_impl=cfg.mix_impl)
             adj = refreshed if active is None else \
                 jnp.where(active[:, None], refreshed, adj)
         A = mixing_matrix(adj, p, active=active)
-        flat = mix_flat(A, flat, impl=cfg.mix_impl)
+        if comp is None:
+            flat = mix_flat(A, flat, impl=cfg.mix_impl)
+        else:
+            flat = _compress.mix_compressed(comp, A, flat, payload, dec,
+                                            impl=cfg.mix_impl)
         stacked = engine.unflatten(flat)
 
         val_acc, val_loss = engine.eval_val(stacked)
@@ -414,6 +511,7 @@ def run_dpfl_reference(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
             result.val_acc_history.append(np.asarray(val_acc))
             result.graph_history.append(np.asarray(adj))
 
+    _fill_comm_bytes(result, cfg, engine.n_params)
     best = engine.unflatten(best_flat)
     test_acc, _ = engine.eval_test(best)
     result.test_acc = np.asarray(test_acc)
@@ -450,6 +548,11 @@ def abstract_round_state(engine: FLEngine, cfg: DPFLConfig) -> RoundState:
         aux["graph_hist"] = sds((hist_len, N, N), jnp.bool_)
     if cfg.participation is not None:
         aux["part"] = sds((cfg.rounds, N), jnp.bool_)
+    comp = _compress.normalize(cfg.compression)
+    if comp is not None:
+        aux["k_comp"] = key_t
+        if _compress.uses_ef(comp):
+            aux["ef"] = sds((N, P_))
     return RoundState(
         t=sds((), jnp.int32), key=key_t, flat=sds((N, P_)),
         best_val=sds((N,)), best_flat=sds((N, P_)),

@@ -2,7 +2,8 @@ from .engine import FLEngine
 from .round_engine import (RoundState, init_round_state, make_round_step,
                            run_rounds)
 from .baselines import BASELINES, run_baseline
+from .compress import CompressionConfig
 
-__all__ = ["FLEngine", "BASELINES", "run_baseline",
+__all__ = ["FLEngine", "BASELINES", "run_baseline", "CompressionConfig",
            "RoundState", "init_round_state", "make_round_step",
            "run_rounds"]

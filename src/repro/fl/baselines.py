@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..core.graph import mix_flat, mixing_matrix
 from ..data.availability import schedule_for_data
+from . import compress as _compress
 from .engine import FLEngine
 from .round_engine import (init_round_state, make_round_step, run_rounds,
                            shard_round_state)
@@ -52,7 +53,7 @@ def _finish(engine, best_flat):
 
 def _loop(engine, rounds, tau, seed, aggregate, *, local_train=None,
           eval_flat=None, cache_key=None, make_aux=None, aux_specs=None,
-          participation=None):
+          participation=None, compression=None):
     """Generic round loop: local train -> aggregate -> track best-val.
 
     Runs on the compiled round engine: the whole round (including the
@@ -68,6 +69,16 @@ def _loop(engine, rounds, tau, seed, aggregate, *, local_train=None,
     round-t local training holds absent clients' params, and
     ``aggregate`` reads the same row for its own sampling semantics
     (e.g. `_global_avg(..., active=...)`).
+
+    ``compression`` (a `repro.fl.CompressionConfig`) enables codec-
+    compressed uplink exchange (DESIGN.md §11): the loop carries the
+    error-feedback residuals (client-sharded ``aux["ef"]``) and the
+    stochastic-rounding key, and calls ``aggregate(flat, aux, t, dec)``
+    with ``dec`` — the decoded (N, P) models a receiver reconstructs
+    from each client's C(x + e) payload — so the method decides which of
+    its cross-client reads are transmitted (compressed) models. The
+    `identity` codec normalizes away and the 3-arg path is traced
+    unchanged (bitwise).
 
     ``cache_key`` (a hashable tuple naming the method + its closure
     hyperparameters) memoizes the compiled round_step on the engine —
@@ -91,6 +102,31 @@ def _loop(engine, rounds, tau, seed, aggregate, *, local_train=None,
                          part=P(None, tuple(engine.client_axes))
                          if engine.mesh is not None else P())
         part_key = "part"
+    comp = _compress.normalize(compression)
+    if comp is not None:
+        aux = dict(aux, k_comp=jax.random.fold_in(key, 977))
+        aux_specs = dict(aux_specs, k_comp=P())
+        if _compress.uses_ef(comp):
+            aux = dict(aux, ef=jnp.zeros_like(flat0))
+            aux_specs = dict(aux_specs,
+                             ef=engine.client_spec(2)
+                             if engine.mesh is not None else P())
+        base_agg = aggregate
+
+        def aggregate(flat, aux, t):  # noqa: F811 — the compressed wrap
+            payload, dec, new_ef = _compress.compress_exchange(
+                comp, flat, aux.get("ef"),
+                jax.random.fold_in(aux["k_comp"], t))
+            del payload  # baselines do not account comm; DPFL does
+            out, aux2 = base_agg(flat, aux, t, dec)
+            if new_ef is not None:
+                if part_key is not None:
+                    # an absent client transmits nothing: its residual
+                    # holds (same rule as the DPFL engine, DESIGN.md §11)
+                    a = aux[part_key][t]
+                    new_ef = jnp.where(a[:, None], new_ef, aux["ef"])
+                aux2 = dict(aux2, ef=new_ef)
+            return out, aux2
     if cache_key is None:
         round_step = make_round_step(engine, tau=tau, aggregate=aggregate,
                                      local_train=local_train,
@@ -102,7 +138,7 @@ def _loop(engine, rounds, tau, seed, aggregate, *, local_train=None,
         if cache is None:
             cache = engine._baseline_step_cache = {}
         k = (tau, engine.mesh, engine.client_axes,
-             part_key is not None) + tuple(cache_key)
+             part_key is not None, comp) + tuple(cache_key)
         if k not in cache:
             cache[k] = make_round_step(engine, tau=tau, aggregate=aggregate,
                                        local_train=local_train,
@@ -127,9 +163,20 @@ def run_local(engine, rounds=20, tau=5, seed=0, **kw):
     return _finish(engine, best_flat)
 
 
-def run_fedavg(engine, rounds=20, tau=5, seed=0, participation=None, **kw):
+def run_fedavg(engine, rounds=20, tau=5, seed=0, participation=None,
+               compression=None, **kw):
     p = engine.p
-    if participation is None:
+    if _compress.normalize(compression) is not None:
+        def aggregate(f, s, t, dec):
+            # uplink compression: the server averages what clients
+            # TRANSMIT (decoded payloads); the downlink global replaces
+            # participants' models uncompressed
+            if participation is None:
+                return _global_avg(dec, p), s
+            a = s["part"][t]
+            return jnp.where(a[:, None], _global_avg(dec, p, active=a),
+                             f), s
+    elif participation is None:
         def aggregate(f, s, t):
             return _global_avg(f, p), s
     else:
@@ -140,7 +187,8 @@ def run_fedavg(engine, rounds=20, tau=5, seed=0, participation=None, **kw):
             return jnp.where(a[:, None], _global_avg(f, p, active=a), f), s
     best_flat, _, _ = _loop(engine, rounds, tau, seed, aggregate,
                             cache_key=("global_avg",),
-                            participation=participation)
+                            participation=participation,
+                            compression=compression)
     return _finish(engine, best_flat)
 
 

@@ -1,0 +1,79 @@
+"""Pallas-TPU kernel mixing top-k-sparsified client models (DESIGN.md §11).
+
+Computes ``out = A @ densify(vals, idx)`` where A is the (M, N) mixing
+operator with its diagonal zeroed (the Eq.-4 self term stays exact and is
+added by the caller), and (vals, idx) is the (N, K) top-k payload of each
+client's flattened params — K = ceil(topk_frac * P) << P. The dense
+(N, P) peer matrix is never materialized in HBM: each grid step one-hot
+expands a (1, bk) chunk of ONE client's payload against the current
+column panel in VMEM and accumulates the rank-1 update
+
+    out[:, panel] += A[:, n] (1, bk payload chunk @ bk x bp one-hot)
+
+into the fp32-resident output panel. Grid is (P panels, N clients,
+K chunks) with the panel index OUTERMOST, so the output block stays
+resident across the whole (n, kb) sweep (sequential on TPU; the same
+revisit-accumulate pattern as a blocked matmul).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, v_ref, i_ref, o_ref, *, bp):
+    n = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when((n == 0) & (kb == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    p0 = pl.program_id(0) * bp
+    v = v_ref[...].astype(jnp.float32)          # (1, bk) payload values
+    idx = i_ref[...]                            # (1, bk) int32 (-1 = pad)
+    a_col = a_ref[...].astype(jnp.float32)      # (M, 1) column n of A
+    bk = v.shape[1]
+    # one-hot scatter of the chunk into this column panel (pad indices of
+    # -1 match no column); duplicates ADD, same as the scatter-add oracle
+    cols = p0 + jax.lax.broadcasted_iota(jnp.int32, (bk, bp), 1)
+    onehot = (idx.T == cols).astype(jnp.float32)            # (bk, bp)
+    row = jnp.dot(v, onehot, preferred_element_type=jnp.float32)  # (1, bp)
+    o_ref[...] += jnp.dot(a_col, row,
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("p_dim", "block_p", "block_k", "interpret"))
+def compressed_graph_mix(A, vals, idx, p_dim: int, *, block_p: int = 512,
+                         block_k: int = 512, interpret: bool = False):
+    """A: (M, N); vals/idx: (N, K), idx in [0, p_dim). Returns (M, p_dim)
+    = A @ densify(vals, idx) in fp32 accumulation, cast to vals.dtype."""
+    M, N = A.shape
+    K = vals.shape[1]
+    bp = min(block_p, p_dim)
+    bk = min(block_k, K)
+    pad_p = (-p_dim) % bp
+    pad_k = (-K) % bk
+    if pad_k:
+        vals = jnp.pad(vals, ((0, 0), (0, pad_k)))
+        idx = jnp.pad(idx, ((0, 0), (0, pad_k)), constant_values=-1)
+    Pp, Kp = p_dim + pad_p, K + pad_k
+    out = pl.pallas_call(
+        functools.partial(_kernel, bp=bp),
+        grid=(Pp // bp, N, Kp // bk),
+        in_specs=[
+            pl.BlockSpec((M, 1), lambda pi, n, kb: (0, n)),   # A column n
+            pl.BlockSpec((1, bk), lambda pi, n, kb: (n, kb)),
+            pl.BlockSpec((1, bk), lambda pi, n, kb: (n, kb)),
+        ],
+        out_specs=pl.BlockSpec((M, bp), lambda pi, n, kb: (0, pi)),
+        out_shape=jax.ShapeDtypeStruct((M, Pp), jnp.float32),
+        interpret=interpret,
+    )(A, vals, idx)
+    out = out[:, :p_dim] if pad_p else out
+    return out.astype(vals.dtype)

@@ -12,6 +12,7 @@ from typing import Optional
 import jax
 
 from . import ref
+from .compressed_graph_mix import compressed_graph_mix as _compressed_mix
 from .flash_attention import flash_attention as _flash
 from .graph_mix import graph_mix as _graph_mix
 from .rglru_scan import rglru_scan as _rglru_scan
@@ -60,6 +61,47 @@ def graph_mix(A, W, impl: Optional[str] = None, *, mesh=None,
     return shard_map(row_block, mesh=mesh,
                      in_specs=(P(ca, None), P(ca, None)),
                      out_specs=P(ca, None), check_vma=False)(A, W)
+
+
+def compressed_graph_mix(A, vals, idx, p_dim: int,
+                         impl: Optional[str] = None, *, mesh=None,
+                         client_axes=None, **kw):
+    """Top-k-compressed Eq.-4 mixing ``A @ densify(vals, idx)`` without
+    materializing the dense (N, P) peer matrix on the host (DESIGN.md
+    §11). A: (M, N) with a zeroed diagonal (the exact self term is the
+    caller's); vals/idx: the (N, K) top-k payload, idx in [0, p_dim).
+
+    With ``mesh``/``client_axes`` the op runs as a `shard_map` over the
+    client axis, and the all-gather moves the COMPRESSED (values,
+    indices) panels — 2K words per peer instead of P, which is the whole
+    point of sparsifying the exchange; each shard then computes its own
+    row-block with the dispatched kernel.
+    """
+    m = _impl(impl)
+
+    def local(a, v, i):
+        if m == "ref":
+            return ref.compressed_graph_mix_ref(a, v, i, p_dim)
+        return _compressed_mix(a, v, i, p_dim,
+                               interpret=(m == "interpret"), **kw)
+
+    if mesh is None:
+        return local(A, vals, idx)
+    from jax.sharding import PartitionSpec as P
+
+    from ..sharding.compat import shard_map
+
+    ca = tuple(client_axes)
+
+    def row_block(a_blk, v_blk, i_blk):
+        v_full = jax.lax.all_gather(v_blk, ca, axis=0, tiled=True)
+        i_full = jax.lax.all_gather(i_blk, ca, axis=0, tiled=True)
+        return local(a_blk, v_full, i_full)
+
+    # check_vma=False: pallas_call has no shard_map replication rule
+    return shard_map(row_block, mesh=mesh,
+                     in_specs=(P(ca, None), P(ca, None), P(ca, None)),
+                     out_specs=P(ca, None), check_vma=False)(A, vals, idx)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None,

@@ -21,6 +21,24 @@ def graph_mix_ref(A, W):
     return (A.astype(jnp.float32) @ W.astype(jnp.float32)).astype(W.dtype)
 
 
+def densify_topk(vals, idx, p_dim):
+    """Scatter a (N, K) top-k payload back to dense (N, p_dim) fp32.
+    THE single definition of the densify semantics: duplicate indices
+    ADD, matching the `compressed_graph_mix` kernel's one-hot
+    accumulation — `repro.fl.compress.decode` and the oracle below both
+    call this, so codec and kernel cannot drift apart."""
+    N = vals.shape[0]
+    return jnp.zeros((N, p_dim), jnp.float32).at[
+        jnp.arange(N)[:, None], idx].add(vals.astype(jnp.float32))
+
+
+def compressed_graph_mix_ref(A, vals, idx, p_dim):
+    """Oracle for the top-k mixing kernel: densify, then the fp32
+    graph_mix matmul."""
+    dense = densify_topk(vals, idx, p_dim)
+    return (A.astype(jnp.float32) @ dense).astype(vals.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=None):
     """q: (B, Sq, Hq, hd); k, v: (B, Sk, Hkv, hd); aligned positions
     (q_pos = kv_pos = arange(S))."""

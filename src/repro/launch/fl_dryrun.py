@@ -27,12 +27,14 @@ os.environ["XLA_FLAGS"] = (
 import argparse  # noqa: E402
 import json  # noqa: E402
 import time  # noqa: E402
+import warnings  # noqa: E402
 
 from ..configs.paper_cnn import CONFIG as CNN_CONFIG  # noqa: E402
 from ..core.dpfl import (DPFLConfig, abstract_round_state,  # noqa: E402
                          dpfl_round_step)
 from ..data import (ParticipationConfig,  # noqa: E402
                     make_federated_classification)
+from ..fl.compress import CompressionConfig  # noqa: E402
 from ..fl.engine import FLEngine  # noqa: E402
 from ..models.classifier import PaperCNN  # noqa: E402
 from ..roofline import analyze_compiled  # noqa: E402
@@ -42,12 +44,16 @@ from .mesh import make_client_mesh  # noqa: E402
 def build_engine_step(n_clients: int, n_train: int, n_val: int, tau: int,
                       budget: int, pods: int, devices: int,
                       participation: float = 1.0,
-                      avail_model: str = "bernoulli"):
+                      avail_model: str = "bernoulli",
+                      compress: str = "none", topk_frac: float = 0.1,
+                      quant_bits: int = 8):
     """Client-sharded FLEngine + the cached DPFL round_step + an abstract
     RoundState, ready to lower. ``participation < 1`` lowers the
     participation-aware step (availability schedule in aux, restricted
     mixing/refresh, realized-comm counters — DESIGN.md §9) instead of the
-    schedule-free full-participation program."""
+    schedule-free full-participation program; ``compress`` lowers the
+    codec-compressed exchange (decoded probes, compressed mix, EF
+    residuals in aux — DESIGN.md §11)."""
     mesh = make_client_mesh(devices, pods=pods)
     c = CNN_CONFIG
     data = make_federated_classification(
@@ -58,8 +64,11 @@ def build_engine_step(n_clients: int, n_train: int, n_val: int, tau: int,
                       batch_size=16).shard_clients(mesh)
     part = None if participation >= 1.0 else ParticipationConfig(
         rate=participation, model=avail_model)
+    comp = None if compress == "none" else CompressionConfig(
+        codec=compress, topk_frac=topk_frac, quant_bits=quant_bits)
     cfg = DPFLConfig(rounds=1, tau_train=tau, budget=budget,
-                     track_history=False, participation=part)
+                     track_history=False, participation=part,
+                     compression=comp)
     return dpfl_round_step(engine, cfg), abstract_round_state(engine, cfg), \
         mesh
 
@@ -79,19 +88,38 @@ def main():
                          "aware round_step (DESIGN.md §9)")
     ap.add_argument("--avail-model", default="bernoulli",
                     choices=["bernoulli", "markov", "cluster"])
-    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "identity", "topk", "int8"],
+                    help="peer-exchange codec; lowers the compressed "
+                         "round_step (DESIGN.md §11)")
+    ap.add_argument("--topk-frac", type=float, default=0.1,
+                    help="topk codec: fraction of P transmitted")
+    ap.add_argument("--quant-bits", type=int, default=8,
+                    help="int8 codec: wire bits per coordinate")
+    ap.add_argument("--out", default="benchmarks/results/dryrun",
+                    help="output dir for the JSON record; --out '' is a "
+                         "deprecated alias for --no-out")
+    ap.add_argument("--no-out", action="store_true",
+                    help="don't write the JSON record")
     args = ap.parse_args()
+    if args.out == "":
+        # the old "don't write" sentinel; kept for backward compat
+        warnings.warn("fl_dryrun --out '' is deprecated; use --no-out",
+                      DeprecationWarning, stacklevel=2)
+        args.no_out = True
     t0 = time.time()
     step, state, mesh = build_engine_step(
         args.clients, args.n_train, args.n_val, args.tau, args.budget,
-        args.pods, args.devices, args.participation, args.avail_model)
+        args.pods, args.devices, args.participation, args.avail_model,
+        args.compress, args.topk_frac, args.quant_bits)
     lowered = step.lower(state)
     compiled = lowered.compile()
     print("memory_analysis:", compiled.memory_analysis())
     rec = {"workload": "dpfl_round_engine_paper_cnn",
            "clients": args.clients, "tau": args.tau, "budget": args.budget,
            "devices": args.devices, "pods": args.pods,
-           "participation": args.participation, "status": "ok"}
+           "participation": args.participation,
+           "compress": args.compress, "status": "ok"}
     rec.update(analyze_compiled(compiled, mesh.devices.size))
     rec["compile_s"] = time.time() - t0
     rl = rec["roofline"]
@@ -99,7 +127,7 @@ def main():
           f"devices ({args.pods} pods): compute={rl['compute_s']:.4f}s "
           f"memory={rl['memory_s']:.4f}s "
           f"collective={rl['collective_s']:.4f}s dominant={rl['dominant']}")
-    if args.out:
+    if not args.no_out:
         os.makedirs(args.out, exist_ok=True)
         fn = os.path.join(
             args.out,

@@ -1,0 +1,341 @@
+"""Compressed peer exchange (DESIGN.md §11): codec round-trip and
+error-feedback properties, static byte accounting, the exact-self-term
+compressed mix, and the compressed round engine against the host
+reference — with the `identity` codec asserted BITWISE-identical to the
+compression-free path (the acceptance invariant)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CompressionConfig, DPFLConfig, ParticipationConfig,
+                        run_dpfl, run_dpfl_reference)
+from repro.data import make_federated_classification
+from repro.fl import compress
+from repro.fl.engine import FLEngine
+from repro.models.classifier import MLP
+
+
+# ------------------------------------------------------------ config
+
+
+def test_compression_config_validation():
+    with pytest.raises(ValueError):
+        CompressionConfig(codec="gzip")
+    with pytest.raises(ValueError):
+        CompressionConfig(codec="topk", topk_frac=0.0)
+    with pytest.raises(ValueError):
+        CompressionConfig(codec="topk", topk_frac=1.5)
+    with pytest.raises(ValueError):
+        CompressionConfig(codec="int8", quant_bits=1)
+    with pytest.raises(ValueError):
+        CompressionConfig(codec="int8", quant_bits=9)
+
+
+def test_identity_normalizes_away():
+    """identity IS the compression-free path: it normalizes to None, so
+    the engine's compiled-step cache and the traced program are shared
+    with compression=None by construction."""
+    assert compress.normalize(None) is None
+    assert compress.normalize(CompressionConfig("identity")) is None
+    lossy = CompressionConfig("topk")
+    assert compress.normalize(lossy) is lossy
+    assert not compress.uses_ef(None)
+    assert not compress.uses_ef(CompressionConfig("identity"))
+    assert compress.uses_ef(lossy)
+    assert not compress.uses_ef(
+        CompressionConfig("topk", error_feedback=False))
+
+
+def test_bytes_per_model_static_arithmetic():
+    P = 1000
+    assert compress.bytes_per_model(None, P) == 4 * P
+    assert compress.bytes_per_model(CompressionConfig("identity"), P) \
+        == 4 * P
+    # topk: fp32 value + int32 index per kept coordinate
+    assert compress.bytes_per_model(
+        CompressionConfig("topk", topk_frac=0.1), P) == 8 * 100
+    assert compress.bytes_per_model(
+        CompressionConfig("topk", topk_frac=1.0), P) == 8 * P
+    # int8: quant_bits per coordinate + one fp32 scale per model
+    assert compress.bytes_per_model(
+        CompressionConfig("int8", quant_bits=8), P) == P + 4
+    assert compress.bytes_per_model(
+        CompressionConfig("int8", quant_bits=4), P) == P // 2 + 4
+    # k rounds UP and never exceeds P
+    assert compress.topk_k(CompressionConfig("topk", topk_frac=1e-9), P) \
+        == 1
+    assert compress.topk_k(CompressionConfig("topk", topk_frac=1.0), P) \
+        == P
+
+
+# ------------------------------------------------------------ codecs
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 8), p=st.integers(2, 300),
+       frac=st.floats(0.01, 1.0), seed=st.integers(0, 1000))
+def test_topk_keeps_exactly_k(n, p, frac, seed):
+    """Property: the payload carries exactly k = ceil(frac * P) entries
+    per client — the k largest magnitudes, at unique indices — and the
+    decode reproduces those entries exactly."""
+    cfg = CompressionConfig("topk", topk_frac=frac)
+    k = compress.topk_k(cfg, p)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, p))
+    payload = compress.encode(cfg, x, jax.random.PRNGKey(0))
+    vals, idx = np.asarray(payload["vals"]), np.asarray(payload["idx"])
+    assert vals.shape == idx.shape == (n, k)
+    dec = np.asarray(compress.decode(cfg, payload, p))
+    xs = np.asarray(x)
+    for r in range(n):
+        assert len(set(idx[r])) == k                    # unique indices
+        assert np.count_nonzero(dec[r]) == k            # exactly k kept
+        np.testing.assert_array_equal(dec[r][idx[r]], xs[r][idx[r]])
+        kept = np.abs(xs[r][idx[r]])
+        dropped = np.delete(np.abs(xs[r]), idx[r])
+        if dropped.size:
+            assert kept.min() >= dropped.max() - 1e-7   # magnitude top-k
+
+
+def test_topk_full_frac_roundtrip_exact():
+    cfg = CompressionConfig("topk", topk_frac=1.0)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 57))
+    payload = compress.encode(cfg, x, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(
+        np.asarray(compress.decode(cfg, payload, 57)), np.asarray(x))
+
+
+@settings(max_examples=10, deadline=None)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 1000))
+def test_int8_dequant_error_bounded(bits, seed):
+    """Property: stochastic uniform quantization rounds to one of the two
+    neighboring levels, so the per-coordinate dequant error is below one
+    level width (the per-model scale)."""
+    cfg = CompressionConfig("int8", quant_bits=bits)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (5, 200)) * 3.0
+    payload = compress.encode(cfg, x, jax.random.fold_in(
+        jax.random.PRNGKey(seed), 1))
+    dec = np.asarray(compress.decode(cfg, payload, 200))
+    scale = np.asarray(payload["scale"])
+    err = np.abs(dec - np.asarray(x))
+    assert (err <= scale[:, None] * (1 + 1e-5)).all()
+    levels = (1 << (bits - 1)) - 1
+    assert np.abs(np.asarray(payload["q"], np.int32)).max() <= levels
+
+
+def test_int8_stochastic_rounding_is_unbiased():
+    """E[decode] = input: averaging the dequant over many independent
+    rounding keys converges to the input."""
+    cfg = CompressionConfig("int8", quant_bits=4)  # coarse: bias shows
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 64))
+    decs = [np.asarray(compress.decode(cfg, compress.encode(
+        cfg, x, jax.random.PRNGKey(i)), 64)) for i in range(256)]
+    scale = np.asarray(compress.encode(
+        cfg, x, jax.random.PRNGKey(0))["scale"])
+    bias = np.abs(np.mean(decs, axis=0) - np.asarray(x))
+    # se of the mean of 256 draws of a <1-level Bernoulli residual
+    assert (bias <= scale[:, None] * 0.2).all()
+
+
+@pytest.mark.parametrize("cfg", [
+    CompressionConfig("topk", topk_frac=0.25),
+    CompressionConfig("int8", quant_bits=8),
+], ids=["topk", "int8"])
+def test_error_feedback_residual_norm_nonincreasing(cfg):
+    """Property: each round's residual contracts the encoder input —
+    ||e'|| = ||C_in - C(C_in)|| <= ||C_in|| (top-k drops the SMALLEST
+    coordinates; int8 errs below one level per coordinate) — and iterated
+    EF against a fixed model stays bounded instead of accumulating."""
+    x = jax.random.normal(jax.random.PRNGKey(11), (4, 64))
+    ef = jnp.zeros_like(x)
+    norms = []
+    for t in range(12):
+        xin = x + ef
+        _, _, ef = compress.compress_exchange(
+            cfg, x, ef, jax.random.fold_in(jax.random.PRNGKey(0), t))
+        assert float(jnp.linalg.norm(ef)) <= \
+            float(jnp.linalg.norm(xin)) * (1 + 1e-6)
+        norms.append(float(jnp.linalg.norm(ef)))
+    # bounded: the EF fixed point c/(1-c)||x|| with c = sqrt(1 - k/P)
+    # (topk) — use a generous common cap for both codecs
+    assert max(norms) <= 8 * float(jnp.linalg.norm(x))
+
+
+def test_compress_exchange_without_ef():
+    cfg = CompressionConfig("topk", topk_frac=0.5, error_feedback=False)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 40))
+    payload, dec, new_ef = compress.compress_exchange(
+        cfg, x, None, jax.random.PRNGKey(0))
+    assert new_ef is None
+    np.testing.assert_array_equal(
+        np.asarray(dec),
+        np.asarray(compress.decode(cfg, payload, 40)))
+
+
+@pytest.mark.parametrize("cfg", [
+    CompressionConfig("topk", topk_frac=0.25),
+    CompressionConfig("int8", quant_bits=8),
+], ids=["topk", "int8"])
+def test_mix_compressed_self_term_exact(cfg):
+    """The Eq.-4 self term never travels the wire, so it is never
+    compressed: mix_compressed = A_off @ decode(payload) + diag(A) * x,
+    and a client whose row is e_k holds its params to fp exactness."""
+    key = jax.random.PRNGKey(5)
+    N, P = 6, 80
+    x = jax.random.normal(key, (N, P))
+    A = np.array(jax.nn.softmax(jax.random.normal(
+        jax.random.fold_in(key, 1), (N, N))))
+    A[2] = np.eye(N)[2]  # a held (absent-style) client
+    A = jnp.asarray(A)
+    payload, dec, _ = compress.compress_exchange(cfg, x, None,
+                                                 jax.random.PRNGKey(0))
+    mixed = np.asarray(compress.mix_compressed(cfg, A, x, payload, dec))
+    off = np.asarray(A) * (1 - np.eye(N))
+    want = off @ np.asarray(dec) + \
+        np.diag(np.asarray(A))[:, None] * np.asarray(x)
+    np.testing.assert_allclose(mixed, want, atol=1e-5)
+    np.testing.assert_array_equal(mixed[2], np.asarray(x)[2])
+
+
+# ----------------------------------------------------- DPFL round engine
+
+
+@pytest.fixture(scope="module")
+def small_setting():
+    data = make_federated_classification(
+        seed=5, n_clients=6, n_clusters=2, partition="pathological",
+        classes_per_client=3, feature_dim=8, n_train=16, n_val=16,
+        n_test=16, noise=2.0, assign_level="cluster")
+    return FLEngine(MLP(8, 16, 10), data, lr=0.05, batch_size=8)
+
+
+_KW = dict(rounds=4, tau_init=2, tau_train=1, budget=3, seed=0)
+
+
+def test_identity_codec_is_bitwise_identical(small_setting):
+    """Acceptance: the identity codec reproduces the pre-compression
+    round step BITWISE on a single device — params, accuracies, graphs,
+    download counts AND byte counters."""
+    eng = small_setting
+    base = run_dpfl(eng, DPFLConfig(**_KW))
+    ident = run_dpfl(eng, DPFLConfig(
+        **_KW, compression=CompressionConfig("identity")))
+    np.testing.assert_array_equal(ident.best_flat, base.best_flat)
+    np.testing.assert_array_equal(ident.test_acc, base.test_acc)
+    assert ident.comm_downloads == base.comm_downloads
+    assert ident.comm_bytes == base.comm_bytes
+    assert ident.comm_bytes_preprocess == base.comm_bytes_preprocess
+    for a, b in zip(ident.graph_history, base.graph_history):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(ident.val_acc_history, base.val_acc_history):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("comp", [
+    CompressionConfig("topk", topk_frac=0.2),
+    CompressionConfig("topk", topk_frac=0.2, error_feedback=False),
+    CompressionConfig("int8", quant_bits=8),
+    CompressionConfig("int8", quant_bits=4),
+], ids=["topk-ef", "topk-noef", "int8", "int4"])
+def test_compressed_engine_matches_reference(small_setting, comp):
+    """Acceptance: engine-vs-reference comm AND comm_bytes counters match
+    for every codec; graphs and accuracies agree."""
+    eng = small_setting
+    cfg = DPFLConfig(**_KW, compression=comp)
+    new = run_dpfl(eng, cfg)
+    ref = run_dpfl_reference(eng, cfg)
+    assert new.comm_downloads == ref.comm_downloads
+    assert new.comm_bytes == ref.comm_bytes
+    assert new.comm_preprocess == ref.comm_preprocess
+    assert new.comm_bytes_preprocess == ref.comm_bytes_preprocess
+    for a, b in zip(new.graph_history, ref.graph_history):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(new.val_acc_history, ref.val_acc_history):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+    np.testing.assert_allclose(new.test_acc, ref.test_acc, atol=1e-6)
+
+
+def test_comm_bytes_is_downloads_times_wire_size(small_setting):
+    """Bytes = realized downloads x the codec's static wire size;
+    preprocessing moved raw fp32 models and is charged 4P per download,
+    codec or not."""
+    eng = small_setting
+    P = eng.n_params
+    for comp in (None, CompressionConfig("topk", topk_frac=0.2),
+                 CompressionConfig("int8")):
+        res = run_dpfl(eng, DPFLConfig(**_KW, compression=comp))
+        bpm = compress.bytes_per_model(comp, P)
+        assert res.comm_bytes == [d * bpm for d in res.comm_downloads]
+        assert res.comm_bytes_preprocess == res.comm_preprocess * 4 * P
+    # lossy codecs genuinely shrink the per-round wire cost
+    lossy = run_dpfl(eng, DPFLConfig(
+        **_KW, compression=CompressionConfig("topk", topk_frac=0.2)))
+    base = run_dpfl(eng, DPFLConfig(**_KW))
+    assert sum(lossy.comm_bytes) < sum(base.comm_bytes)
+    assert lossy.comm_downloads == base.comm_downloads
+
+
+def test_compression_with_participation(small_setting):
+    """The three config axes compose: compressed exchange under partial
+    participation matches the host reference (absent clients hold params
+    AND residuals; realized downloads price the codec's wire size)."""
+    eng = small_setting
+    cfg = DPFLConfig(
+        **_KW,
+        participation=ParticipationConfig(rate=0.5, seed=11),
+        compression=CompressionConfig("topk", topk_frac=0.2))
+    new = run_dpfl(eng, cfg)
+    ref = run_dpfl_reference(eng, cfg)
+    assert new.comm_downloads == ref.comm_downloads
+    assert new.comm_bytes == ref.comm_bytes
+    np.testing.assert_array_equal(new.participation, ref.participation)
+    for a, b in zip(new.graph_history, ref.graph_history):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_allclose(new.test_acc, ref.test_acc, atol=1e-6)
+
+
+def test_random_graph_compression_engine_matches_reference(small_setting):
+    eng = small_setting
+    cfg = DPFLConfig(rounds=3, tau_init=2, tau_train=1, budget=3, seed=0,
+                     random_graph=True,
+                     compression=CompressionConfig("int8"))
+    new = run_dpfl(eng, cfg)
+    ref = run_dpfl_reference(eng, cfg)
+    assert new.comm_downloads == ref.comm_downloads
+    assert new.comm_bytes == ref.comm_bytes
+    np.testing.assert_allclose(new.test_acc, ref.test_acc, atol=1e-6)
+
+
+def test_fedavg_compression(small_setting):
+    """Baselines thread the codec through `_loop`: identity reproduces
+    the uncompressed run bitwise (same traced program), lossy uplink
+    compression runs end to end."""
+    from repro.fl.baselines import run_fedavg
+    eng = small_setting
+    base = run_fedavg(eng, rounds=2, tau=1, seed=0)
+    ident = run_fedavg(eng, rounds=2, tau=1, seed=0,
+                       compression=CompressionConfig("identity"))
+    np.testing.assert_array_equal(ident["test_acc"], base["test_acc"])
+    lossy = run_fedavg(eng, rounds=2, tau=1, seed=0,
+                       compression=CompressionConfig("topk",
+                                                     topk_frac=0.25))
+    assert np.isfinite(lossy["test_acc"]).all()
+    assert lossy["test_acc"].shape == base["test_acc"].shape
+    # composes with partial participation (absent clients hold params
+    # AND residuals — the DESIGN.md §11 rule, same as the DPFL engine);
+    # at rate=0 nothing ever transmits, so the codec cannot move params
+    # off the evaluated init
+    sampled = run_fedavg(
+        eng, rounds=2, tau=1, seed=0,
+        participation=ParticipationConfig(rate=0.5, seed=7),
+        compression=CompressionConfig("topk", topk_frac=0.25))
+    assert np.isfinite(sampled["test_acc"]).all()
+    frozen = run_fedavg(
+        eng, rounds=2, tau=1, seed=0,
+        participation=ParticipationConfig(rate=0.0),
+        compression=CompressionConfig("topk", topk_frac=0.25))
+    init = eng.init_clients(jax.random.PRNGKey(0))
+    acc0, _ = eng.eval_test(init)
+    np.testing.assert_allclose(frozen["test_acc"], np.asarray(acc0),
+                               atol=1e-6)

@@ -6,11 +6,12 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.kernels.compressed_graph_mix import compressed_graph_mix
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.graph_mix import graph_mix
 from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels.ssd import ssd
-from repro.kernels import ref
+from repro.kernels import ops, ref
 
 
 # --------------------------------------------------------------- graph_mix
@@ -40,6 +41,73 @@ def test_graph_mix_dtypes(dtype):
         np.asarray(out, np.float32),
         np.asarray(ref.graph_mix_ref(A, W), np.float32),
         atol=(1e-5 if dtype == jnp.float32 else 5e-2))
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+@pytest.mark.parametrize("n,p,bp", [
+    (5, 700, 512),    # P not a multiple of block_p (pad path)
+    (7, 2048, 512),   # aligned, odd N
+    (3, 130, 256),    # P < block_p (single shrunken panel)
+    (13, 515, 128),   # both: prime N, P % bp = 3
+])
+def test_graph_mix_tile_misaligned_through_dispatch(n, p, bp, impl,
+                                                    monkeypatch):
+    """`kernels.ops.graph_mix` at tile-misaligned shapes under BOTH
+    REPRO_KERNEL_IMPL modes the CI sweeps: N is never blocked (A stays
+    VMEM-resident) and P pads up to the panel size, so no (N, P)
+    combination may change results beyond fp tolerance — exercised
+    through the env-dispatch path, exactly as the round engine calls it."""
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", impl)
+    key = jax.random.PRNGKey(n * 1000 + p)
+    A = jax.nn.softmax(jax.random.normal(key, (n, n)))
+    W = jax.random.normal(jax.random.fold_in(key, 1), (n, p))
+    kw = {} if impl == "ref" else {"block_p": bp}
+    out = ops.graph_mix(A, W, **kw)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.graph_mix_ref(A, W)),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ----------------------------------------------------- compressed graph_mix
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 12), p=st.integers(2, 900),
+       frac=st.floats(0.02, 1.0),
+       bp=st.sampled_from([64, 128, 512]),
+       bk=st.sampled_from([4, 64, 512]), seed=st.integers(0, 100))
+def test_compressed_graph_mix_sweep(n, p, frac, bp, bk, seed):
+    """Property: the Pallas top-k mixing kernel equals the scatter-add
+    oracle for any (N, P, K, block) combination — including K and P not
+    multiples of their block sizes (pad paths: idx=-1 chunks, shrunken
+    panels)."""
+    key = jax.random.PRNGKey(seed)
+    k = max(1, int(frac * p))
+    A = jax.nn.softmax(jax.random.normal(key, (n, n)))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n, p))
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    vals = jnp.take_along_axis(x, idx, axis=1)
+    idx = idx.astype(jnp.int32)
+    out = compressed_graph_mix(A, vals, idx, p, block_p=bp, block_k=bk,
+                               interpret=True)
+    want = ref.compressed_graph_mix_ref(A, vals, idx, p)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_compressed_graph_mix_duplicate_indices_add():
+    """Duplicate indices ADD in kernel and oracle alike (the documented
+    semantics — top-k payloads never produce them, hand-built ones can)."""
+    A = jnp.eye(2)
+    vals = jnp.array([[1.0, 2.0, 4.0], [0.5, 0.25, 0.125]])
+    idx = jnp.array([[3, 3, 0], [1, 1, 1]], jnp.int32)
+    out = compressed_graph_mix(A, vals, idx, 5, block_p=4, block_k=2,
+                               interpret=True)
+    want = np.array([[4.0, 0, 0, 3.0, 0], [0, 0.875, 0, 0, 0]])
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(ref.compressed_graph_mix_ref(A, vals, idx, 5)), want,
+        atol=1e-6)
 
 
 # ---------------------------------------------------------- flash attention
