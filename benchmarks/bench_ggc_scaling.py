@@ -6,8 +6,19 @@ of the vmapped graph build vs N and B_c.
 `python -m benchmarks.bench_ggc_scaling --mesh` measures the shard_map
 graph build (each shard vmaps only its local k rows against all-gathered
 peer panels) vs forced host device count — one subprocess per count, since
---xla_force_host_platform_device_count must precede the jax import."""
+--xla_force_host_platform_device_count must precede the jax import.
+
+`python -m benchmarks.bench_ggc_scaling --sparse-sweep` measures
+rounds/sec of the full compiled round engine in the dense (N, N) vs the
+budget-sparse (N, B) graph representation across N in {32, 128, 512,
+1024} (DESIGN.md §12). The decision-free random-graph cells isolate the
+Eq.-4 mix — O(N²·P) dense matmul vs O(N·B·P) neighbor-list gather — and
+the greedy cells add the GGC refresh, whose sparse scan probes only the
+<= B candidates per client. The dense path is skipped above
+``--dense-max`` (it is the thing the sweep shows collapsing); results go
+to ``benchmarks/results/BENCH_sparse_scaling.json``."""
 import argparse
+import json
 import os
 import subprocess
 import sys
@@ -17,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import DPFLConfig, run_dpfl
 from repro.core.graph import all_clients_graph
 from repro.data import make_federated_classification
 from repro.fl.engine import FLEngine
@@ -58,6 +70,74 @@ def run(bench: Bench):
             bench.record(f"ggc_scaling/N={n_clients}/B={budget}",
                          time.time() - t0,
                          f"edges={int(np.asarray(adj).sum())}")
+
+
+def _sweep_engine(n_clients: int):
+    """A mix-dominated setting for the dense-vs-sparse crossover: tiny
+    per-client data (training and eval are O(N) and identical in both
+    representations) with a P≈2.8k-param MLP so the Eq.-4 aggregation
+    term dominates as N grows."""
+    data = make_federated_classification(
+        seed=0, n_clients=n_clients, n_clusters=4, feature_dim=32,
+        n_train=8, n_val=8, n_test=8, noise=2.0, assign_level="cluster")
+    return FLEngine(MLP(32, 64, 10), data, lr=0.05, batch_size=8)
+
+
+def _time_rounds(engine, cfg_kw, rounds, repeats=3):
+    """rounds/sec of `run_dpfl`, preprocessing excluded by subtracting
+    the best 0-round run from the best full run (the perf_hillclimb
+    protocol, with min-of-repeats on BOTH terms so preprocessing jitter
+    cannot drive the difference negative at small N)."""
+
+    def best_of(r):
+        run_dpfl(engine, DPFLConfig(rounds=r, **cfg_kw))  # warm compiles
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            run_dpfl(engine, DPFLConfig(rounds=r, **cfg_kw))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    pre = best_of(0)
+    loop = best_of(rounds) - pre
+    return rounds / max(loop, 1e-9)
+
+
+def sparse_sweep(n_sweep, budget, rounds, dense_max, out_path):
+    """Dense vs budget-sparse rounds/sec across N; writes the JSON record
+    the README benchmark table cites. Greedy cells (GGC refresh every
+    round) are limited to min(dense_max, 128) dense / 512 sparse — the
+    O(N²) BGGC preprocessing itself becomes the wall at 1024."""
+    cells = []
+    print("graph,N,repr,rounds_per_s")
+    for n in n_sweep:
+        eng = _sweep_engine(n)
+        for graph, max_dense, max_sparse in (
+                ("random", dense_max, max(n_sweep)),
+                ("greedy", min(dense_max, 128), 512)):
+            kw = dict(tau_init=1, tau_train=1, budget=budget, seed=0,
+                      track_history=False, random_graph=(graph == "random"))
+            # small-N rounds are sub-ms: scale the timed loop up so it
+            # dwarfs preprocessing jitter (greedy rounds pay N·B probes
+            # per refresh, so their loop stays shorter)
+            target = 4096 if graph == "random" else 512
+            r_eff = min(64, max(rounds, target // n))
+            for repr_ in ("dense", "sparse"):
+                cap = max_dense if repr_ == "dense" else max_sparse
+                if n > cap:
+                    print(f"{graph},{n},{repr_},skipped")
+                    continue
+                rps = _time_rounds(eng, dict(kw, graph_repr=repr_), r_eff)
+                cells.append({"graph": graph, "N": n, "repr": repr_,
+                              "budget": budget, "rounds": r_eff,
+                              "rounds_per_s": rps})
+                print(f"{graph},{n},{repr_},{rps:.3f}")
+    rec = {"workload": "dpfl_sparse_vs_dense_scaling", "rounds": rounds,
+           "budget": budget, "model_params": 32 * 64 + 64 + 64 * 10 + 10,
+           "cells": cells}
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    json.dump(rec, open(out_path, "w"), indent=1)
+    print(f"wrote {out_path}")
 
 
 def _mesh_worker(n_clients, budget, devices, repeats=3):
@@ -124,12 +204,38 @@ def main():
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--budget", type=int, default=4)
     ap.add_argument("--device-counts", default="1,2,4,8")
+    ap.add_argument("--sparse-sweep", action="store_true",
+                    help="rounds/sec of the dense vs budget-sparse round "
+                         "engine across N (DESIGN.md §12); writes "
+                         "BENCH_sparse_scaling.json")
+    ap.add_argument("--n-sweep", default="32,128,512,1024",
+                    help="comma-separated client counts for --sparse-sweep")
+    ap.add_argument("--rounds", type=int, default=5,
+                    help="timed rounds per --sparse-sweep cell")
+    ap.add_argument("--dense-max", type=int, default=1024,
+                    help="skip the dense path above this N in "
+                         "--sparse-sweep (greedy dense cells cap at 128 "
+                         "regardless — O(N²) reward probes per round)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="with --sparse-sweep: CI-sized sweep "
+                         "(N in {16, 32}, 3 rounds)")
+    ap.add_argument("--out",
+                    default=os.path.join(ROOT, "benchmarks", "results",
+                                         "BENCH_sparse_scaling.json"),
+                    help="with --sparse-sweep: output JSON path")
     args = ap.parse_args()
     if args.mesh_worker:
         _mesh_worker(args.clients, args.budget, args.devices)
     elif args.mesh:
         counts = tuple(int(d) for d in args.device_counts.split(","))
         _mesh_parent(args.clients, args.budget, counts)
+    elif args.sparse_sweep:
+        n_sweep = tuple(int(n) for n in args.n_sweep.split(","))
+        rounds = args.rounds
+        if args.smoke:
+            n_sweep, rounds = (16, 32), 3
+        sparse_sweep(n_sweep, args.budget, rounds, args.dense_max,
+                     args.out)
     else:
         bench = Bench()
         run(bench)

@@ -69,20 +69,24 @@ def run_variant(arch, shape, mesh, tag, opts):
     return json.load(open(fn))
 
 
-def bench_dpfl_rounds(rounds=10, n_clients=16, repeats=2, out=None):
+def bench_dpfl_rounds(rounds=10, n_clients=16, repeats=2, out=None,
+                      graph_repr="dense"):
     """rounds/sec: host-driven reference loop vs compiled round engine.
     Preprocessing (shared) is excluded by timing whole runs minus a
     0-round run; track_history=False keeps the new path device-resident.
     Writes the ``BENCH_dpfl.json`` summary for the bench trajectory
     (``out`` overrides the path — the CI regression gate writes a fresh
     copy next to the committed one and compares via
-    `benchmarks.check_regression`)."""
+    `benchmarks.check_regression`). ``graph_repr="sparse"`` benchmarks
+    the budget-sparse neighbor-list engine (DESIGN.md §12; the committed
+    baseline stays dense — `bench_ggc_scaling --sparse-sweep` is the
+    dense-vs-sparse crossover harness)."""
     from repro.core import DPFLConfig, run_dpfl, run_dpfl_reference
     from benchmarks.common import standard_setting
 
     _, _, engine = standard_setting(n_clients=n_clients)
     kw = dict(tau_init=2, tau_train=2, budget=4, seed=0,
-              track_history=False)
+              track_history=False, graph_repr=graph_repr)
 
     def time_path(fn, label):
         fn(engine, DPFLConfig(rounds=1, **kw))  # warm up compiles
@@ -106,7 +110,7 @@ def bench_dpfl_rounds(rounds=10, n_clients=16, repeats=2, out=None):
     os.makedirs(results_dir, exist_ok=True)
     fn = out or os.path.join(results_dir, "BENCH_dpfl.json")
     json.dump({"workload": "dpfl_round_loop", "rounds": rounds,
-               "clients": n_clients,
+               "clients": n_clients, "graph_repr": graph_repr,
                "host_loop_rounds_per_s": ref,
                "round_engine_rounds_per_s": new,
                "speedup": new / ref},
@@ -114,7 +118,8 @@ def bench_dpfl_rounds(rounds=10, n_clients=16, repeats=2, out=None):
     print(f"wrote {fn}")
 
 
-def bench_dpfl_mesh_worker(rounds, n_clients, devices, repeats=2):
+def bench_dpfl_mesh_worker(rounds, n_clients, devices, repeats=2,
+                           graph_repr="dense"):
     """Subprocess body of --dpfl --mesh: run_dpfl on the client-sharded
     engine over the forced host devices of THIS process; prints one CSV
     row. Preprocessing is excluded like bench_dpfl_rounds."""
@@ -132,7 +137,7 @@ def bench_dpfl_mesh_worker(rounds, n_clients, devices, repeats=2):
     if devices > 1:
         engine.shard_clients(make_client_mesh(devices))
     kw = dict(tau_init=2, tau_train=2, budget=4, seed=0,
-              track_history=False)
+              track_history=False, graph_repr=graph_repr)
     run_dpfl(engine, DPFLConfig(rounds=1, **kw))  # warm up compiles
     t0 = _time.perf_counter()
     run_dpfl(engine, DPFLConfig(rounds=0, **kw))
@@ -146,7 +151,8 @@ def bench_dpfl_mesh_worker(rounds, n_clients, devices, repeats=2):
           f"{rounds / best:.3f},,,,")
 
 
-def bench_dpfl_mesh(rounds=10, n_clients=16, device_counts=(1, 2, 4, 8)):
+def bench_dpfl_mesh(rounds=10, n_clients=16, device_counts=(1, 2, 4, 8),
+                    graph_repr="dense"):
     """rounds/sec of the mesh-sharded round engine vs device count. Each
     count runs in a subprocess because --xla_force_host_platform_device_count
     must be set before jax imports."""
@@ -161,7 +167,8 @@ def bench_dpfl_mesh(rounds=10, n_clients=16, device_counts=(1, 2, 4, 8)):
         r = subprocess.run(
             [sys.executable, "-m", "benchmarks.perf_hillclimb",
              "--dpfl-mesh-worker", "--devices", str(d),
-             "--rounds", str(rounds), "--clients", str(n_clients)],
+             "--rounds", str(rounds), "--clients", str(n_clients),
+             "--graph-repr", graph_repr],
             cwd=ROOT, env=env, capture_output=True, text=True,
             timeout=2400)
         out = [ln for ln in r.stdout.splitlines()
@@ -195,9 +202,14 @@ def main():
                          "regression gate runs")
     ap.add_argument("--out", default=None,
                     help="with --dpfl: override the BENCH_dpfl.json path")
+    ap.add_argument("--graph-repr", default="dense",
+                    choices=["dense", "sparse"],
+                    help="with --dpfl: collaboration-graph layout of the "
+                         "benchmarked engine (DESIGN.md §12)")
     args = ap.parse_args()
     if args.dpfl_mesh_worker:
-        bench_dpfl_mesh_worker(args.rounds, args.clients, args.devices)
+        bench_dpfl_mesh_worker(args.rounds, args.clients, args.devices,
+                               graph_repr=args.graph_repr)
         return
     if args.dpfl:
         if args.smoke:
@@ -205,10 +217,11 @@ def main():
         if args.mesh:
             counts = tuple(int(d) for d in args.device_counts.split(","))
             bench_dpfl_mesh(rounds=args.rounds, n_clients=args.clients,
-                            device_counts=counts)
+                            device_counts=counts,
+                            graph_repr=args.graph_repr)
         else:
             bench_dpfl_rounds(rounds=args.rounds, n_clients=args.clients,
-                              out=args.out)
+                              out=args.out, graph_repr=args.graph_repr)
         return
     os.makedirs(OUT, exist_ok=True)
     print("pair,tag,status,compute_s,memory_s,collective_s,dominant,"

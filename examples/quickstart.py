@@ -1,9 +1,13 @@
 """Quickstart: DPFL vs local-only vs FedAvg on a clustered heterogeneous
-synthetic benchmark, ~2 minutes on CPU.
+synthetic benchmark, ~2 minutes on CPU at the default sizes.
 
   PYTHONPATH=src python examples/quickstart.py
+
+CI runs it at toy sizes (the docs-and-examples job):
+
+  PYTHONPATH=src python examples/quickstart.py --rounds 2 --tau 1
 """
-import numpy as np
+import argparse
 
 from repro.core import DPFLConfig, graph_stats, run_dpfl
 from repro.data import make_federated_classification
@@ -13,21 +17,37 @@ from repro.models.classifier import MLP
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--tau", type=int, default=3,
+                    help="local epochs (tau_init = tau_train = tau)")
+    ap.add_argument("--budget", type=int, default=4,
+                    help="per-client collaborator budget B_c")
+    ap.add_argument("--graph-repr", default="dense",
+                    choices=["dense", "sparse"],
+                    help="graph layout: (N, N) masks or (N, B) neighbor "
+                         "lists (DESIGN.md §12)")
+    args = ap.parse_args()
+
     data = make_federated_classification(
-        seed=3, n_clients=8, n_clusters=2, partition="pathological",
-        classes_per_client=3, feature_dim=16, n_train=16, n_val=24,
-        n_test=48, noise=2.0, assign_level="cluster")
+        seed=3, n_clients=args.clients, n_clusters=2,
+        partition="pathological", classes_per_client=3, feature_dim=16,
+        n_train=16, n_val=24, n_test=48, noise=2.0, assign_level="cluster")
     engine = FLEngine(MLP(16, 32, 10), data, lr=0.05, batch_size=8)
 
-    local = run_baseline("local", engine, rounds=8, tau=3, seed=0)
-    fedavg = run_baseline("fedavg", engine, rounds=8, tau=3, seed=0)
-    res = run_dpfl(engine, DPFLConfig(rounds=8, tau_init=3, tau_train=3,
-                                      budget=4, seed=0))
+    local = run_baseline("local", engine, rounds=args.rounds, tau=args.tau,
+                         seed=0)
+    fedavg = run_baseline("fedavg", engine, rounds=args.rounds,
+                          tau=args.tau, seed=0)
+    res = run_dpfl(engine, DPFLConfig(
+        rounds=args.rounds, tau_init=args.tau, tau_train=args.tau,
+        budget=args.budget, seed=0, graph_repr=args.graph_repr))
 
     print(f"{'method':12s} mean-acc  per-client")
     for name, acc in (("local", local["test_acc"]),
                       ("fedavg", fedavg["test_acc"]),
-                      ("DPFL(B=4)", res.test_acc)):
+                      (f"DPFL(B={args.budget})", res.test_acc)):
         print(f"{name:12s} {acc.mean():.4f}   "
               + " ".join(f"{a:.2f}" for a in acc))
 

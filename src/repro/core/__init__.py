@@ -9,10 +9,15 @@ from ..fl.compress import CompressionConfig
 from .dpfl import (DPFLConfig, DPFLResult, abstract_round_state,
                    dpfl_round_step, graph_stats, run_dpfl,
                    run_dpfl_reference)
-from .graph import (GreedyCarry, all_clients_bggc, all_clients_graph,
-                    all_clients_graph_heterogeneous, greedy_decision_step,
-                    make_bggc, make_ggc, make_ggc_heterogeneous,
-                    make_ggc_naive, mix_flat, mix_pytree, mixing_matrix)
+from .graph import (GreedyCarry, adjacency_from_neighbors,
+                    all_clients_bggc, all_clients_bggc_sparse,
+                    all_clients_graph, all_clients_graph_heterogeneous,
+                    all_clients_graph_sparse, count_neighbor_downloads,
+                    greedy_decision_step, make_bggc, make_ggc,
+                    make_ggc_heterogeneous, make_ggc_naive,
+                    make_ggc_sparse, mask_to_neighbors, mix_flat,
+                    mix_flat_sparse, mix_pytree, mixing_matrix,
+                    neighbors_from_adjacency, sparse_mixing_weights)
 
 __all__ = [
     "DPFLConfig", "DPFLResult", "ParticipationConfig",
@@ -21,7 +26,12 @@ __all__ = [
     "graph_stats", "dpfl_round_step", "abstract_round_state",
     "GreedyCarry", "greedy_decision_step",
     "make_ggc", "make_ggc_naive", "make_bggc", "make_ggc_heterogeneous",
+    "make_ggc_sparse",
     "all_clients_graph", "all_clients_graph_heterogeneous",
-    "all_clients_bggc",
-    "mixing_matrix", "mix_pytree", "mix_flat",
+    "all_clients_bggc", "all_clients_bggc_sparse",
+    "all_clients_graph_sparse",
+    "mixing_matrix", "mix_pytree", "mix_flat", "mix_flat_sparse",
+    "sparse_mixing_weights", "mask_to_neighbors",
+    "neighbors_from_adjacency", "adjacency_from_neighbors",
+    "count_neighbor_downloads",
 ]

@@ -38,8 +38,10 @@ from ..fl.compress import CompressionConfig
 from ..fl.engine import FLEngine
 from ..fl.round_engine import (RoundState, init_round_state, make_round_step,
                                run_rounds, shard_round_state)
-from .graph import (all_clients_bggc, all_clients_graph, mixing_matrix,
-                    mix_flat)
+from .graph import (all_clients_bggc, all_clients_bggc_sparse,
+                    all_clients_graph, all_clients_graph_sparse,
+                    count_neighbor_downloads, mixing_matrix, mix_flat,
+                    mix_flat_sparse, sparse_mixing_weights)
 
 
 @dataclass
@@ -64,6 +66,14 @@ class DPFLConfig:
     # only realized downloads. None = full participation (the schedule-
     # free compiled path). Preprocessing (tau_init + BGGC) runs before
     # the schedule starts and always sees every client.
+    graph_repr: str = "dense"         # dense | sparse (DESIGN.md §12)
+    # "sparse" stores the collaboration graph as (N, B) int32 neighbor
+    # lists instead of (N, N) masks: the GGC refresh probes only the
+    # <= B candidates per client, the Eq.-4 mix gathers only selected
+    # peer rows (kernels.ops.sparse_graph_mix — O(N·B·P) instead of
+    # O(N²·P)), and under a mesh the exchange rotates peer panels
+    # keeping only requested rows. Decisions and comm counters are
+    # layout-independent integers; "sparse" requires graph_impl="ggc".
     compression: Optional[CompressionConfig] = None
     # peer-exchange codec (DESIGN.md §11): lossy codecs transmit
     # C(x_k + e_k) — error-feedback residuals ride client-sharded in
@@ -101,6 +111,17 @@ class DPFLResult:
     comm_bytes_preprocess: int = 0
     participation: Optional[np.ndarray] = None  # (rounds, N) realized
     #                                             schedule, if enabled
+
+
+def _nbr_to_adj_np(idx: np.ndarray, n: int) -> np.ndarray:
+    """Host-side (N, B) neighbor lists -> (N, n) bool adjacency (diag
+    True), for result reporting of sparse runs."""
+    idx = np.asarray(idx)
+    adj = np.zeros((idx.shape[0], n), bool)
+    rows, cols = np.nonzero(idx >= 0)
+    adj[rows, idx[rows, cols]] = True
+    adj |= np.eye(idx.shape[0], n, dtype=bool)
+    return adj
 
 
 def _sparsity(adj: np.ndarray) -> float:
@@ -151,6 +172,26 @@ def _comp_base_key(seed: int) -> jax.Array:
     return jax.random.fold_in(jax.random.PRNGKey(seed), 977)
 
 
+def _sparse(cfg: DPFLConfig) -> bool:
+    """True for the neighbor-list representation (DESIGN.md §12); also
+    validates the combination — the literal-oracle graph_impl="naive"
+    only exists dense, and the Fig.-3 random graph is repr-agnostic."""
+    if cfg.graph_repr not in ("dense", "sparse"):
+        raise ValueError(f"graph_repr must be 'dense' or 'sparse', "
+                         f"got {cfg.graph_repr!r}")
+    if cfg.graph_repr == "sparse" and cfg.graph_impl != "ggc" \
+            and not cfg.random_graph:
+        raise ValueError("graph_repr='sparse' supports graph_impl='ggc' "
+                         "only (the naive oracle is dense-only)")
+    return cfg.graph_repr == "sparse"
+
+
+def _nbr_width(N: int, budget: int) -> int:
+    """Slot count B of the (N, B) neighbor lists: a client selects at
+    most min(budget, N-1) off-diagonal peers."""
+    return max(1, min(budget, N - 1))
+
+
 def _cached_bggc(engine: FLEngine, cfg: DPFLConfig, reward_fn, budget: int):
     """Fetch-or-build the jitted all-clients BGGC preprocessing. The old
     path ran N eager un-jitted `bggc` calls in a python loop — N separate
@@ -160,14 +201,23 @@ def _cached_bggc(engine: FLEngine, cfg: DPFLConfig, reward_fn, budget: int):
     cache = getattr(engine, "_bggc_cache", None)
     if cache is None:
         cache = engine._bggc_cache = {}
-    key = (budget, cfg.mix_impl, engine.mesh, engine.client_axes)
+    sparse = _sparse(cfg)
+    key = (budget, cfg.mix_impl, sparse, engine.mesh, engine.client_axes)
     if key not in cache:
         mesh, ca = engine.mesh, engine.client_axes
 
-        def build(k_graph, flat, cand, p):
-            return all_clients_bggc(k_graph, flat, p, cand, reward_fn,
-                                    budget, mix_impl=cfg.mix_impl,
-                                    mesh=mesh, client_axes=ca)
+        if sparse:
+            # neighbor-list BGGC: full candidacy is implicit, no (N, N)
+            # candidate table; emits the (N, B) Omega lists directly
+            def build(k_graph, flat, p):
+                return all_clients_bggc_sparse(
+                    k_graph, flat, p, reward_fn, budget,
+                    mix_impl=cfg.mix_impl, mesh=mesh, client_axes=ca)
+        else:
+            def build(k_graph, flat, cand, p):
+                return all_clients_bggc(k_graph, flat, p, cand, reward_fn,
+                                        budget, mix_impl=cfg.mix_impl,
+                                        mesh=mesh, client_axes=ca)
 
         cache[key] = jax.jit(build)
     return cache[key]
@@ -188,26 +238,40 @@ def _preprocess(engine: FLEngine, cfg: DPFLConfig, reward_fn, budget: int):
     stacked, _ = engine.local_train(stacked, k_pre, epochs=cfg.tau_init)
     flat = engine.flatten(stacked)
 
-    full_mask = jnp.ones((N, N), bool)
+    sparse = _sparse(cfg)
     if cfg.random_graph:
-        # Fig. 3 ablation: random Omega_k of size budget
+        # Fig. 3 ablation: random Omega_k of size budget; both
+        # representations sample the SAME peer sets from the same rng
         rng = np.random.default_rng(cfg.seed)
+        B = _nbr_width(N, budget)
         omega = np.zeros((N, N), bool)
+        nbr = np.full((N, B), -1, np.int32)
         for k_ in range(N):
             others = np.setdiff1d(np.arange(N), [k_])
             sel = rng.choice(others, size=min(budget, N - 1), replace=False)
             omega[k_, sel] = True
             omega[k_, k_] = True
-        omega = jnp.asarray(omega)
+            nbr[k_, :len(sel)] = np.sort(sel)
+        omega = jnp.asarray(nbr) if sparse else jnp.asarray(omega)
+    elif sparse:
+        # BGGC emitting (N, B) Omega lists (no (N, N) table anywhere)
+        omega = _cached_bggc(engine, cfg, reward_fn, budget)(
+            k_graph, flat, p)
     else:
         # BGGC: batched preprocessing within the communication budget,
         # compiled once for all clients (vmapped; sharded under a mesh)
         omega = _cached_bggc(engine, cfg, reward_fn, budget)(
-            k_graph, flat, full_mask, p)
+            k_graph, flat, jnp.ones((N, N), bool), p)
 
-    A = mixing_matrix(omega, p)
-    flat = mix_flat(A, flat, impl=cfg.mix_impl, mesh=engine.mesh,
-                    client_axes=engine.client_axes)
+    if sparse:
+        self_w, nbr_w = sparse_mixing_weights(omega, p)
+        flat = mix_flat_sparse(self_w, nbr_w, omega, flat,
+                               impl=cfg.mix_impl, mesh=engine.mesh,
+                               client_axes=engine.client_axes)
+    else:
+        A = mixing_matrix(omega, p)
+        flat = mix_flat(A, flat, impl=cfg.mix_impl, mesh=engine.mesh,
+                        client_axes=engine.client_axes)
     return omega, flat, k_graph, k_train
 
 
@@ -323,17 +387,99 @@ def _make_dpfl_aggregate(engine: FLEngine, cfg: DPFLConfig, reward_fn,
     return aggregate
 
 
+def _make_dpfl_aggregate_sparse(engine: FLEngine, cfg: DPFLConfig,
+                                reward_fn, budget: int, hist_len: int):
+    """The neighbor-list counterpart of `_make_dpfl_aggregate`
+    (DESIGN.md §12): the graph rides in aux as (N, B) int32 lists
+    (``aux["nbr"]`` = current C_k, ``aux["omega_nbr"]`` = Omega), the GGC
+    refresh probes only the <= B candidates per client, Eq.-4 mixes by
+    gathering selected peer rows (`mix_flat_sparse` /
+    `sparse_mix_compressed` — never a dense (N, N) operator), and the
+    comm counters sum realized list lengths (`count_neighbor_downloads`,
+    integer-identical to the dense accounting). Participation and
+    compression semantics are unchanged from §9/§11: absent clients keep
+    their previous lists and their row weights collapse to e_k; peers
+    exchange C(x+e) and receivers mix decoded payloads with the self
+    term exact."""
+    p = engine.p
+    mesh, ca = engine.mesh, engine.client_axes
+    part = cfg.participation is not None
+    comp = _compress.normalize(cfg.compression)
+    ef = comp is not None and _compress.uses_ef(comp)
+
+    def aggregate(flat, aux, t):
+        nbr = aux["nbr"]
+        omega = aux["omega_nbr"]
+        active = aux["part"][t] if part else None
+        if comp is None:
+            probe_w, payload, dec, new_ef = flat, None, None, None
+        else:
+            payload, dec, new_ef = _compress.compress_exchange(
+                comp, flat, aux["ef"] if ef else None,
+                jax.random.fold_in(aux["k_comp"], t))
+            probe_w = dec
+            if ef and part:
+                # an absent client transmits nothing: its residual holds
+                new_ef = jnp.where(active[:, None], new_ef, aux["ef"])
+        if cfg.random_graph:
+            new_nbr = nbr  # Omega is the (fixed, random) graph
+            comm_t = count_neighbor_downloads(nbr, active)
+        else:
+            refresh = (t % cfg.refresh_period) == 0
+            comm_t = jnp.where(
+                refresh, count_neighbor_downloads(omega, active),
+                count_neighbor_downloads(nbr, active))
+
+            def do_refresh(f):
+                refreshed = all_clients_graph_sparse(
+                    jax.random.fold_in(aux["k_graph"], 1000 + t), f, p,
+                    omega, reward_fn, budget, mix_impl=cfg.mix_impl,
+                    mesh=mesh, client_axes=ca, active=active)
+                if part:
+                    # absent clients keep their previous C_k lists
+                    refreshed = jnp.where(active[:, None], refreshed, nbr)
+                return refreshed
+
+            new_nbr = jax.lax.cond(refresh, do_refresh, lambda f: nbr,
+                                   probe_w)
+        self_w, nbr_w = sparse_mixing_weights(new_nbr, p, active=active)
+        if comp is None:
+            mixed = mix_flat_sparse(self_w, nbr_w, new_nbr, flat,
+                                    impl=cfg.mix_impl, mesh=mesh,
+                                    client_axes=ca)
+        else:
+            mixed = _compress.sparse_mix_compressed(
+                comp, self_w, nbr_w, new_nbr, flat, payload, dec,
+                impl=cfg.mix_impl, mesh=mesh, client_axes=ca)
+        aux = dict(aux, nbr=new_nbr,
+                   comm=aux["comm"].at[t].set(comm_t.astype(jnp.int32)))
+        if ef:
+            aux["ef"] = new_ef
+        if hist_len:
+            aux["graph_hist"] = aux["graph_hist"].at[t % hist_len].set(
+                new_nbr)
+        return mixed, aux
+
+    return aggregate
+
+
 def _dpfl_aux_specs(engine: FLEngine, hist_len: int,
-                    participation: bool = False, comp=None):
+                    participation: bool = False, comp=None,
+                    sparse: bool = False):
     """PartitionSpecs for the DPFL aux pytree on the client mesh: the
-    adjacency, Omega, graph history, the participation schedule and the
-    error-feedback residuals shard their client axis; the graph and codec
-    keys and the comm counters replicate."""
+    graph (adjacency rows or neighbor lists), Omega, graph history, the
+    participation schedule and the error-feedback residuals shard their
+    client axis; the graph and codec keys and the comm counters
+    replicate."""
     if engine.mesh is None:
         return None
     ca = tuple(engine.client_axes)
-    specs = {"adj": PSpec(ca, None), "omega": PSpec(ca, None),
-             "k_graph": PSpec(), "comm": PSpec()}
+    if sparse:
+        specs = {"nbr": PSpec(ca, None), "omega_nbr": PSpec(ca, None),
+                 "k_graph": PSpec(), "comm": PSpec()}
+    else:
+        specs = {"adj": PSpec(ca, None), "omega": PSpec(ca, None),
+                 "k_graph": PSpec(), "comm": PSpec()}
     if hist_len:
         specs["graph_hist"] = PSpec(None, ca, None)
     if participation:
@@ -356,17 +502,20 @@ def _cached_round_step(engine: FLEngine, cfg: DPFLConfig, budget: int,
         cache = engine._dpfl_round_step_cache = {}
     part = cfg.participation is not None
     comp = _compress.normalize(cfg.compression)
+    sparse = _sparse(cfg)
     key = (cfg.tau_train, cfg.refresh_period, cfg.random_graph,
            cfg.graph_impl, cfg.mix_impl, budget, hist_len, part, comp,
-           engine.mesh, engine.client_axes)
+           sparse, engine.mesh, engine.client_axes)
     if key not in cache:
         reward_fn = engine.make_reward_fn()
-        aggregate = _make_dpfl_aggregate(engine, cfg, reward_fn, budget,
-                                         hist_len)
+        make_agg = (_make_dpfl_aggregate_sparse if sparse
+                    else _make_dpfl_aggregate)
+        aggregate = make_agg(engine, cfg, reward_fn, budget, hist_len)
         cache[key] = make_round_step(
             engine, tau=cfg.tau_train, aggregate=aggregate,
             hist_len=hist_len,
-            aux_specs=_dpfl_aux_specs(engine, hist_len, part, comp),
+            aux_specs=_dpfl_aux_specs(engine, hist_len, part, comp,
+                                      sparse),
             participation_key="part" if part else None)
     return cache[key]
 
@@ -380,15 +529,26 @@ def run_dpfl(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
     # ---- preprocess (Alg. 1 lines 1-5)
     omega, flat, k_graph, k_train = _preprocess(engine, cfg, reward_fn,
                                                 budget)
-    result = DPFLResult(test_acc=None, omega=np.asarray(omega))
+    sparse = _sparse(cfg)
+    result = DPFLResult(
+        test_acc=None,
+        omega=(_nbr_to_adj_np(np.asarray(omega), N) if sparse
+               else np.asarray(omega)))
     result.comm_preprocess = _comm_preprocess(cfg, N, budget)
 
     # ---- training loop (Alg. 1 lines 6-12): one compiled round_step
     hist_len = _hist_len(cfg)
-    aux = {"adj": omega, "omega": omega, "k_graph": k_graph,
-           "comm": jnp.zeros((cfg.rounds,), jnp.int32)}
-    if hist_len:
-        aux["graph_hist"] = jnp.zeros((hist_len, N, N), bool)
+    if sparse:
+        aux = {"nbr": omega, "omega_nbr": omega, "k_graph": k_graph,
+               "comm": jnp.zeros((cfg.rounds,), jnp.int32)}
+        if hist_len:
+            aux["graph_hist"] = jnp.full(
+                (hist_len, N, _nbr_width(N, budget)), -1, jnp.int32)
+    else:
+        aux = {"adj": omega, "omega": omega, "k_graph": k_graph,
+               "comm": jnp.zeros((cfg.rounds,), jnp.int32)}
+        if hist_len:
+            aux["graph_hist"] = jnp.zeros((hist_len, N, N), bool)
     if cfg.participation is not None:
         sched = schedule_for_data(cfg.participation, cfg.rounds,
                                   engine.data)
@@ -408,12 +568,18 @@ def run_dpfl(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
             state, engine.mesh, engine.client_axes,
             aux_specs=_dpfl_aux_specs(engine, hist_len,
                                       cfg.participation is not None,
-                                      comp))
+                                      comp, sparse))
 
     def flush_histories(st, k):
-        # the ONLY host transfers: every hist_len rounds + once at the end
+        # the ONLY host transfers: every hist_len rounds + once at the
+        # end. Sparse graph history comes off device as (N, B) lists and
+        # is converted host-side so DPFLResult.graph_history always holds
+        # (N, N) adjacencies (graph_stats, figures, tests)
         result.val_acc_history.extend(np.asarray(st.val_hist[:k]))
-        result.graph_history.extend(np.asarray(st.aux["graph_hist"][:k]))
+        hist = np.asarray(st.aux["graph_hist"][:k])
+        if sparse:
+            hist = [_nbr_to_adj_np(h, N) for h in hist]
+        result.graph_history.extend(hist)
 
     state = run_rounds(
         round_step, state, cfg.rounds,
@@ -441,10 +607,14 @@ def run_dpfl_reference(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
 
     omega, flat, k_graph, k_train = _preprocess(engine, cfg, reward_fn,
                                                 budget)
+    sparse = _sparse(cfg)
     stacked = engine.unflatten(flat)
     best_val = jnp.full((N,), -jnp.inf)
     best_flat = engine.flatten(stacked)
-    result = DPFLResult(test_acc=None, omega=np.asarray(omega))
+    result = DPFLResult(
+        test_acc=None,
+        omega=(_nbr_to_adj_np(np.asarray(omega), N) if sparse
+               else np.asarray(omega)))
     result.comm_preprocess = _comm_preprocess(cfg, N, budget)
     adj = omega
     sched = None
@@ -479,7 +649,10 @@ def run_dpfl_reference(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
                     jnp.where(active[:, None], new_ef, ef)
         refresh = (not cfg.random_graph) and (t % cfg.refresh_period == 0)
         count_graph = omega if (refresh or cfg.random_graph) else adj
-        if active is None:
+        if sparse:
+            result.comm_downloads.append(
+                int(count_neighbor_downloads(count_graph, active)))
+        elif active is None:
             result.comm_downloads.append(
                 int(np.asarray(count_graph).sum()) - N)
         else:
@@ -487,6 +660,12 @@ def run_dpfl_reference(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
                 int(_realized_downloads(count_graph, active)))
         if cfg.random_graph:
             adj = omega
+        elif refresh and sparse:
+            refreshed = all_clients_graph_sparse(
+                jax.random.fold_in(k_graph, 1000 + t), probe_w, p, omega,
+                reward_fn, budget, mix_impl=cfg.mix_impl, active=active)
+            adj = refreshed if active is None else \
+                jnp.where(active[:, None], refreshed, adj)
         elif refresh:
             cand = omega if active is None else omega & active[None, :]
             refreshed = all_clients_graph(
@@ -495,12 +674,22 @@ def run_dpfl_reference(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
                 mix_impl=cfg.mix_impl)
             adj = refreshed if active is None else \
                 jnp.where(active[:, None], refreshed, adj)
-        A = mixing_matrix(adj, p, active=active)
-        if comp is None:
-            flat = mix_flat(A, flat, impl=cfg.mix_impl)
+        if sparse:
+            self_w, nbr_w = sparse_mixing_weights(adj, p, active=active)
+            if comp is None:
+                flat = mix_flat_sparse(self_w, nbr_w, adj, flat,
+                                       impl=cfg.mix_impl)
+            else:
+                flat = _compress.sparse_mix_compressed(
+                    comp, self_w, nbr_w, adj, flat, payload, dec,
+                    impl=cfg.mix_impl)
         else:
-            flat = _compress.mix_compressed(comp, A, flat, payload, dec,
-                                            impl=cfg.mix_impl)
+            A = mixing_matrix(adj, p, active=active)
+            if comp is None:
+                flat = mix_flat(A, flat, impl=cfg.mix_impl)
+            else:
+                flat = _compress.mix_compressed(comp, A, flat, payload,
+                                                dec, impl=cfg.mix_impl)
         stacked = engine.unflatten(flat)
 
         val_acc, val_loss = engine.eval_val(stacked)
@@ -509,7 +698,9 @@ def run_dpfl_reference(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
         best_flat = jnp.where(improved[:, None], flat, best_flat)
         if cfg.track_history:
             result.val_acc_history.append(np.asarray(val_acc))
-            result.graph_history.append(np.asarray(adj))
+            result.graph_history.append(
+                _nbr_to_adj_np(np.asarray(adj), N) if sparse
+                else np.asarray(adj))
 
     _fill_comm_bytes(result, cfg, engine.n_params)
     best = engine.unflatten(best_flat)
@@ -542,10 +733,20 @@ def abstract_round_state(engine: FLEngine, cfg: DPFLConfig) -> RoundState:
     def sds(shape, dt=jnp.float32):
         return jax.ShapeDtypeStruct(shape, dt)
 
-    aux = {"adj": sds((N, N), jnp.bool_), "omega": sds((N, N), jnp.bool_),
-           "k_graph": key_t, "comm": sds((cfg.rounds,), jnp.int32)}
-    if hist_len:
-        aux["graph_hist"] = sds((hist_len, N, N), jnp.bool_)
+    if _sparse(cfg):
+        budget = cfg.budget if cfg.budget is not None else N - 1
+        B = _nbr_width(N, budget)
+        aux = {"nbr": sds((N, B), jnp.int32),
+               "omega_nbr": sds((N, B), jnp.int32),
+               "k_graph": key_t, "comm": sds((cfg.rounds,), jnp.int32)}
+        if hist_len:
+            aux["graph_hist"] = sds((hist_len, N, B), jnp.int32)
+    else:
+        aux = {"adj": sds((N, N), jnp.bool_),
+               "omega": sds((N, N), jnp.bool_),
+               "k_graph": key_t, "comm": sds((cfg.rounds,), jnp.int32)}
+        if hist_len:
+            aux["graph_hist"] = sds((hist_len, N, N), jnp.bool_)
     if cfg.participation is not None:
         aux["part"] = sds((cfg.rounds, N), jnp.bool_)
     comp = _compress.normalize(cfg.compression)

@@ -20,6 +20,12 @@ independent of batching order — the seeded-randomness premise of Thm 1.
 All set-average / aggregation matmuls route through the dispatching
 `kernels.ops.graph_mix` (Pallas on TPU, pure-jnp fp32 reference elsewhere);
 pass ``mix_impl`` to pin an implementation (DESIGN.md §4).
+
+Every builder exists in two graph representations (DESIGN.md §12): the
+dense entry points emit (N, N) bool masks, the ``*_sparse`` ones emit
+(N, B) int32 neighbor lists (ascending peer ids, -1 pads, self edge
+implicit) whose greedy scans probe only the <= B candidates — same
+seeded decisions bit for bit, O(N·B) instead of O(N²) work.
 """
 from __future__ import annotations
 
@@ -118,10 +124,16 @@ def greedy_decision_step(reward_fn: Callable):
     """
 
     def step(carry: GreedyCarry, j, w_j, *, key, k_idx, cand_mask, p,
-             budget) -> GreedyCarry:
+             budget, slot=None, is_cand=None, p_j=None) -> GreedyCarry:
         maskX, maskY, wX, wY, pX, pY, nsel = carry
-        is_cand = cand_mask[j]
-        p_j = p[j]
+        # ``slot`` is the carry-mask position of candidate ``j``: the
+        # dense scans index their (N,) masks by the global id, the sparse
+        # scan (make_ggc_sparse) by the (B,) neighbor-list slot — the
+        # PRNG stream and the probes always use the global id, so both
+        # layouts draw identical coin flips for identical candidates
+        slot = j if slot is None else slot
+        is_cand = cand_mask[j] if is_cand is None else is_cand
+        p_j = p[j] if p_j is None else p_j
         # four reward probes, batched into one vmapped forward; barriers
         # pin the probe/reward fusion boundary so the decision stream does
         # not additionally depend on what surrounds the kernel (compiled
@@ -141,8 +153,8 @@ def greedy_decision_step(reward_fn: Callable):
         add = (u < prob) & is_cand & (nsel < budget)
         rem = (~(u < prob)) & is_cand
         return GreedyCarry(
-            maskX=maskX.at[j].set(maskX[j] | add),
-            maskY=maskY.at[j].set(maskY[j] & ~rem),
+            maskX=maskX.at[slot].set(maskX[slot] | add),
+            maskY=maskY.at[slot].set(maskY[slot] & ~rem),
             wX=jnp.where(add, wX + p_j * w_j, wX),
             wY=jnp.where(rem, wY - p_j * w_j, wY),
             pX=jnp.where(add, pX + p_j, pX),
@@ -308,34 +320,42 @@ def make_ggc_heterogeneous(reward_fn: Callable, max_budget: int, *,
 
 
 def _shard_clients_graph(per_client, mesh, client_axes, keys, ks,
-                         cand_masks, flat_w, p):
+                         cand_masks, flat_w, p, extra=()):
     """shard_map a vmapped per-client graph builder over the client mesh
     axes: each shard all-gathers the peer parameter panels once, then
     vmaps ``per_client`` over only its shard-local k rows — the GGC
-    reward probes and greedy decisions stay shard-local (DESIGN.md §8)."""
+    reward probes and greedy decisions stay shard-local (DESIGN.md §8).
+
+    ``cand_masks`` is any per-client (N, C) row table — dense (N, N) bool
+    candidate masks or sparse (N, B) int32 neighbor lists. ``extra`` are
+    replicated trailing arguments passed whole to every ``per_client``
+    call (e.g. the (N,) availability mask of a participation round)."""
     from jax.sharding import PartitionSpec as P
 
     from ..sharding.compat import shard_map
 
     ca = tuple(client_axes)
 
-    def block(keys_blk, k_blk, cand_blk, w_blk, p_full):
+    def block(keys_blk, k_blk, cand_blk, w_blk, p_full, *extra_full):
         # materialize the gathered peer panels before the probes so the
         # gather cannot fuse into the reward matmuls (keeps the per-shard
         # probe numerics as close to the single-device build as XLA
         # allows — see DESIGN.md §8 on greedy-decision fp sensitivity)
         w_full = _barrier(
             jax.lax.all_gather(w_blk, ca, axis=0, tiled=True))
-        return jax.vmap(per_client, in_axes=(0, 0, 0, None, None))(
-            keys_blk, k_blk, cand_blk, w_full, p_full)
+        return jax.vmap(
+            per_client,
+            in_axes=(0, 0, 0, None, None) + (None,) * len(extra_full))(
+                keys_blk, k_blk, cand_blk, w_full, p_full, *extra_full)
 
     # check_vma=False: the probes may dispatch to the Pallas graph_mix
     # kernel, which has no shard_map replication rule
     return shard_map(
         block, mesh=mesh,
-        in_specs=(P(ca, None), P(ca), P(ca, None), P(ca, None), P(None)),
+        in_specs=(P(ca, None), P(ca), P(ca, None), P(ca, None), P(None))
+        + (P(None),) * len(extra),
         out_specs=P(ca, None), check_vma=False)(keys, ks, cand_masks,
-                                                flat_w, p)
+                                                flat_w, p, *extra)
 
 
 def all_clients_graph(key, flat_w, p, cand_masks, reward_fn, budget,
@@ -377,6 +397,216 @@ def all_clients_bggc(key, flat_w, p, cand_masks, reward_fn, budget,
                                     jnp.arange(N), cand_masks, flat_w, p)
     return jax.vmap(bggc, in_axes=(0, 0, 0, None, None))(
         keys, jnp.arange(N), cand_masks, flat_w, p)
+
+
+# ------------------------------------------------- sparse neighbor lists
+#
+# Budget-sparse representation (DESIGN.md §12): the constrained greedy
+# keeps |C_k| <= B, so the collaboration graph is stored as (N, B) int32
+# neighbor-index lists (ascending global client ids, -1 = empty slot,
+# self excluded — the Eq.-4 self term is implicit and always present)
+# instead of (N, N) masks. Decisions, realized-download counts and wire
+# bytes are identical integers in both layouts; only fp summation order
+# differs in the mixing (§12 numerics).
+
+
+def mask_to_neighbors(mask, k_idx, budget: int):
+    """One client's (N,) bool selection mask -> (budget,) int32 neighbor
+    list: the indices of the selected OFF-DIAGONAL peers in ascending
+    order, -1 padding the unused slots. Lossless for selections of size
+    <= budget — exactly what the budget-constrained greedy guarantees."""
+    N = mask.shape[0]
+    ar = jnp.arange(N)
+    off = mask & (ar != k_idx)
+    score = jnp.where(off, N - ar, 0)           # >0 iff selected, desc = asc ids
+    vals, pos = jax.lax.top_k(score, min(budget, N))
+    idx = jnp.where(vals > 0, pos, -1).astype(jnp.int32)
+    if budget > N:
+        idx = jnp.pad(idx, (0, budget - N), constant_values=-1)
+    return idx
+
+
+def neighbors_from_adjacency(adj, budget: int):
+    """(N, N) bool adjacency -> (N, budget) int32 neighbor lists (row k =
+    ascending off-diagonal peers of k, -1 pads). Inverse of
+    `adjacency_from_neighbors` whenever every row has <= budget peers."""
+    N = adj.shape[0]
+    return jax.vmap(lambda row, k: mask_to_neighbors(row, k, budget))(
+        jnp.asarray(adj, bool), jnp.arange(N))
+
+
+def adjacency_from_neighbors(idx, n: int):
+    """(N, B) int32 neighbor lists -> (N, n) bool adjacency with the
+    diagonal forced True (every client collaborates with itself)."""
+    N = idx.shape[0]
+    rows = jnp.arange(N)[:, None]
+    adj = jnp.zeros((N, n), bool).at[rows, jnp.clip(idx, 0, n - 1)].max(
+        idx >= 0)
+    return adj | jnp.eye(N, n, dtype=bool)
+
+
+def count_neighbor_downloads(idx, active=None):
+    """Realized model downloads encoded by neighbor lists ``idx`` (N, B):
+    one download per non-sentinel slot, restricted (DESIGN.md §9) to
+    available downloader/peer pairs when ``active`` ((N,) bool) is given.
+    Integer-exact: equals the off-diagonal edge count of the equivalent
+    dense adjacency, so dense and sparse comm accounting cannot drift."""
+    N = idx.shape[0]
+    valid = idx >= 0
+    if active is not None:
+        act = jnp.asarray(active, bool)
+        valid = valid & act[:, None] & act[jnp.clip(idx, 0, N - 1)]
+    return jnp.sum(valid)
+
+
+def sparse_mixing_weights(idx, p, active=None):
+    """Eq.-4 row weights in neighbor-list form. idx: (N, B) int32 lists
+    (-1 = empty); p: (N,) fp32 client weights. Returns ``(self_w, nbr_w)``
+    — (N,) and (N, B) fp32 with row k satisfying
+    ``self_w[k] + sum_b nbr_w[k, b] = 1``: exactly the nonzero entries of
+    `mixing_matrix`'s row k (diagonal forced on, p-weighted, normalized).
+
+    ``active`` ((N,) bool) restricts to available downloader/peer pairs
+    and renormalizes (DESIGN.md §9): an absent client's row is e_k. As in
+    the dense path, ``active=None`` and an all-ones mask are bitwise
+    identical (multiplying by 1.0 is exact)."""
+    N, _ = idx.shape
+    p = jnp.asarray(p, jnp.float32)
+    w = (idx >= 0).astype(jnp.float32)
+    safe = jnp.clip(idx, 0, N - 1)
+    if active is not None:
+        act = jnp.asarray(active, jnp.float32)
+        w = w * act[:, None] * act[safe]
+    w = w * p[safe]
+    denom = jnp.maximum(p + w.sum(axis=1), 1e-12)
+    return p / denom, w / denom[:, None]
+
+
+def mix_flat_sparse(self_w, nbr_w, idx, flat_w, peers=None, *,
+                    impl: Optional[str] = None, mesh=None,
+                    client_axes=None):
+    """Eq.-4 mix in neighbor-list form: gathers only the <= B selected
+    peer rows per client instead of the dense (N, N) @ (N, P) matmul —
+    O(N·B·P) work. ``peers`` (default ``flat_w``) is the peer-visible
+    model table — the decoded payloads under compression, while the self
+    term always reads the exact local row of ``flat_w`` (DESIGN.md §11).
+    Dispatches through `kernels.ops.sparse_graph_mix`; the mesh path
+    rotates peer panels shard-to-shard and keeps only requested rows
+    rather than all-gathering the full (N, P) panel (DESIGN.md §12)."""
+    return _kops.sparse_graph_mix(
+        self_w, nbr_w, idx, flat_w,
+        (flat_w if peers is None else peers,),
+        impl=impl, mesh=mesh, client_axes=client_axes)
+
+
+def make_ggc_sparse(reward_fn: Callable, budget: int, *,
+                    mix_impl: Optional[str] = None):
+    """GGC emitting a neighbor LIST: the scan visits only the <= B
+    candidate slots (in the same seeded-permutation order as the dense
+    scan) instead of all N clients — O(B) reward probes per client.
+
+    Returns ``ggc(key, k_idx, cand_idx, flat_w, p, active=None)`` with
+    cand_idx (B,) int32 = Omega_k as a neighbor list; the result is the
+    selected C_k as a (B,) int32 ascending list (-1 pads). Because the
+    coin-flip stream is keyed by the candidate's GLOBAL id and skipped
+    non-candidates are exact no-ops of the dense scan, the selections are
+    BITWISE identical to `make_ggc` on the equivalent mask (tested)."""
+    step = greedy_decision_step(reward_fn)
+
+    def ggc(key, k_idx, cand_idx, flat_w, p, active=None):
+        N = flat_w.shape[0]
+        B = cand_idx.shape[0]
+        safe = jnp.clip(cand_idx, 0, N - 1)
+        valid = (cand_idx >= 0) & (safe != k_idx)
+        if active is not None:
+            valid = valid & active[safe] & active[k_idx]
+        # init running sums with the SAME masked row-matmul as the dense
+        # path (the (N,) scatter is a per-client transient — the stacked
+        # (N, B) output is what rides in state), so probes start bitwise
+        # aligned with `make_ggc`
+        cand_mask = jnp.zeros(N, bool).at[safe].max(valid)
+        carry_full = _greedy_init(k_idx, cand_mask, flat_w, p,
+                                  mix_impl=mix_impl)
+        carry = GreedyCarry(
+            maskX=jnp.zeros(B, bool), maskY=valid,
+            wX=carry_full.wX, wY=carry_full.wY,
+            pX=carry_full.pX, pY=carry_full.pY, nsel=jnp.int32(0))
+        # visit candidate slots in dense-permutation order: position of
+        # each global id in permutation(fold_in(key, 0), N)
+        inv = jnp.argsort(jax.random.permutation(
+            jax.random.fold_in(key, 0), N))
+        visit = jnp.argsort(jnp.where(valid, inv[safe], N + safe))
+        cand_w = flat_w[safe]                     # (B, P) gather
+        p_c = p[safe]
+
+        def body(carry, slot):
+            j = safe[slot]
+            return step(carry, j, cand_w[slot], key=key, k_idx=k_idx,
+                        cand_mask=None, p=None, budget=jnp.int32(budget),
+                        slot=slot, is_cand=valid[slot], p_j=p_c[slot]), None
+
+        carry, _ = jax.lax.scan(body, carry, visit)
+        # canonical output order: ascending global id, -1 slots last
+        sel = jnp.where(carry.maskX, safe, N + safe)
+        sel = jnp.sort(sel)
+        return jnp.where(sel < N, sel, -1).astype(jnp.int32)
+
+    return ggc
+
+
+def all_clients_graph_sparse(key, flat_w, p, cand_idx, reward_fn,
+                             budget: int, mix_impl: Optional[str] = None,
+                             mesh=None, client_axes=None, active=None):
+    """Sparse-repr graph construction for every client: candidates and
+    selections are (N, B) neighbor lists, the (N, N) adjacency never
+    materializes, and each client's greedy scan probes only its <= B
+    candidates. Selections are bitwise-identical to `all_clients_graph`
+    on the equivalent dense masks (tested). ``active`` restricts the
+    candidate pool to available peers (absent-client handling — keeping
+    the previous C_k — is the caller's, as in the dense path)."""
+    N = flat_w.shape[0]
+    ggc = make_ggc_sparse(reward_fn, budget, mix_impl=mix_impl)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(N))
+    extra = () if active is None else (active,)
+    per_client = (ggc if active is None else
+                  (lambda k_, ki, ci, w, pp, act: ggc(k_, ki, ci, w, pp,
+                                                      active=act)))
+    if mesh is not None:
+        return _shard_clients_graph(per_client, mesh, client_axes, keys,
+                                    jnp.arange(N), cand_idx, flat_w, p,
+                                    extra=extra)
+    return jax.vmap(per_client,
+                    in_axes=(0, 0, 0, None, None) + (None,) * len(extra))(
+                        keys, jnp.arange(N), cand_idx, flat_w, p, *extra)
+
+
+def all_clients_bggc_sparse(key, flat_w, p, reward_fn, budget: int,
+                            mix_impl: Optional[str] = None,
+                            mesh=None, client_axes=None):
+    """Batched-GGC preprocessing emitting (N, B) neighbor lists. The
+    Algorithm-3 stream necessarily visits every peer (full candidacy),
+    but the full-ones (N, N) candidate table of the dense entry point is
+    replaced by a per-client transient, and the stacked output is the
+    (N, budget) Omega list. Selections equal `all_clients_bggc` with a
+    full candidate mask, bitwise (tested)."""
+    N = flat_w.shape[0]
+    bggc = make_bggc(reward_fn, budget, mix_impl=mix_impl)
+    # list width: a client can select at most min(budget, N-1) peers, and
+    # the round engine sizes every (N, B) buffer with the same clamp —
+    # budget >= N must not widen the emitted lists past N-1
+    width = max(1, min(budget, N - 1))
+
+    def per_client(key_k, k_idx, _cand, w_full, p_full):
+        mask = bggc(key_k, k_idx, jnp.arange(N) != k_idx, w_full, p_full)
+        return mask_to_neighbors(mask, k_idx, width)
+
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(N))
+    dummy = jnp.zeros((N, 1), jnp.int32)    # unused candidate column
+    if mesh is not None:
+        return _shard_clients_graph(per_client, mesh, client_axes, keys,
+                                    jnp.arange(N), dummy, flat_w, p)
+    return jax.vmap(per_client, in_axes=(0, 0, 0, None, None))(
+        keys, jnp.arange(N), dummy, flat_w, p)
 
 
 def all_clients_graph_heterogeneous(key, flat_w, p, cand_masks, reward_fn,

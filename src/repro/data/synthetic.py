@@ -94,6 +94,25 @@ def make_federated_classification(
     #                                actual effective train-set sizes)
     assign_level: str = "client",  # client | cluster (peers share classes)
 ) -> FederatedData:
+    """Synthetic federated classification benchmark (DESIGN.md §7): the
+    paper's CIFAR-10 heterogeneity structure at CPU-testable sizes.
+
+    Clients belong to ``n_clusters`` hidden clusters; each cluster has
+    its own label-conditional feature distribution (Gaussian prototypes
+    + ``noise``), and label skew comes from ``partition``: "dirichlet"
+    (concentration ``alpha``), "pathological" (``classes_per_client``
+    distinct classes per client) or "iid". With
+    ``assign_level="cluster"`` all clients of a cluster share one class
+    distribution — true statistical peers, the structure GGC should
+    discover.
+
+    Returns a `FederatedData` of stacked arrays: ``train_x`` is
+    ``(N, n_train) + shape`` fp where ``shape`` is ``image_shape`` or
+    ``(feature_dim,)``; ``train_y`` is ``(N, n_train)`` int labels in
+    ``[0, n_classes)`` (val/test alike with their own sizes);
+    ``p`` is ``(N,)`` fp64 aggregation weights summing to 1 (uniform, or
+    proportional to distinct-sample counts with ``p_mode="size"``);
+    ``cluster`` is ``(N,)`` int cluster ids."""
     rng = np.random.default_rng(seed)
     shape = image_shape if image_shape else (feature_dim,)
     # cluster prototypes; smooth images a little so convs have structure

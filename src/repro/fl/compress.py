@@ -202,3 +202,41 @@ def mix_compressed(cfg, A, flat, payload, dec, *, impl=None, mesh=None,
     else:
         raise ValueError(cfg.codec)
     return off + diag[:, None] * flat
+
+
+def _payload_parts(cfg, payload, n_params: int):
+    """(parts, shard-local decode) of a codec payload — what the sparse
+    exchange rotates shard-to-shard instead of dense fp32 panels
+    (DESIGN.md §12): topk moves (vals, idx) = 2K words per peer, int8
+    moves (int8 q, fp32 scale)."""
+    if cfg.codec == "topk":
+        return ((payload["vals"], payload["idx"]),
+                lambda v, i: densify_topk(v, i, n_params))
+    if cfg.codec == "int8":
+        return ((payload["q"], payload["scale"]),
+                lambda q, s: q.astype(jnp.float32) * s[:, None])
+    raise ValueError(cfg.codec)
+
+
+def sparse_mix_compressed(cfg, self_w, nbr_w, nbr_idx, flat, payload, dec,
+                          *, impl=None, mesh=None, client_axes=None):
+    """Neighbor-list Eq.-4 mixing over compressed peers (DESIGN.md §12):
+    the <= B selected peer rows are DECODED payloads while the self term
+    reads the client's exact local model, mirroring `mix_compressed` for
+    the (N, B) sparse representation. self_w: (N,); nbr_w/nbr_idx:
+    (N, B); flat: (N, P) exact local models; payload/dec: the codec wire
+    payload and its decoded (N, P) table from `compress_exchange`.
+
+    Single device reuses ``dec`` (already reconstructed for the GGC
+    probes). Under a client mesh the rotation exchange of
+    `kernels.ops.sparse_graph_mix` carries the COMPRESSED payload parts
+    and decodes each visiting panel shard-locally, so the simulated
+    collective shrinks with the codec exactly like the dense compressed
+    paths."""
+    if mesh is None:
+        return _kops.sparse_graph_mix(self_w, nbr_w, nbr_idx, flat,
+                                      (dec,), impl=impl)
+    parts, decode = _payload_parts(cfg, payload, flat.shape[1])
+    return _kops.sparse_graph_mix(self_w, nbr_w, nbr_idx, flat, parts,
+                                  decode, impl=impl, mesh=mesh,
+                                  client_axes=client_axes)

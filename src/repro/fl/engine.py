@@ -99,9 +99,13 @@ class FLEngine:
             params)
 
     def flatten(self, stacked):
+        """Client-stacked pytree (leaves (N, ...)) -> (N, P) fp32 rows
+        (P = `n_params`), the layout every graph op mixes in."""
         return jax.vmap(lambda t: ravel_pytree(t)[0])(stacked)
 
     def unflatten(self, flat):
+        """(N, P) flattened rows -> client-stacked pytree; exact inverse
+        of `flatten` (ravel_pytree round trip, dtypes restored)."""
         return jax.vmap(self._unravel)(flat)
 
     def _device_data(self, arr):
@@ -174,6 +178,9 @@ class FLEngine:
               self.constrain_clients(keys))
 
         self.train_fn = train_fn
+        # local_train(stacked, key, epochs) -> (stacked', (N,) mean loss):
+        # `epochs` seeded epochs of minibatch SGD vmapped over clients
+        # (stacked leaves (N, ...); per-client streams fold_in by row)
         self.local_train = jax.jit(train_fn, static_argnames=("epochs",))
 
         def eval_split_fn(stacked, xs, ys):
@@ -197,9 +204,13 @@ class FLEngine:
 
     # ------------------------------------------------------------- metrics
     def eval_val(self, stacked):
+        """Per-client validation metrics of a stacked pytree: returns
+        ``(acc (N,) fp32, loss (N,) fp32)`` — each client evaluated on
+        its own (device-resident) validation split."""
         return self._eval_split(stacked, *self.val_data)
 
     def eval_test(self, stacked):
+        """Per-client test metrics, same contract as `eval_val`."""
         return self._eval_split(stacked, *self.test_data)
 
     def make_reward_fn(self):

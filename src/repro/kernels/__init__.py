@@ -1,13 +1,18 @@
 """Pallas-TPU kernels for the perf-critical hot spots, each with a pure-jnp
 oracle in ref.py and a dispatching wrapper in ops.py:
 
-  graph_mix       — DPFL mixing-matrix aggregation (the paper's hot spot)
-  flash_attention — causal GQA + sliding window, online softmax
-  rglru_scan      — RG-LRU first-order linear recurrence
-  ssd             — Mamba2 state-space-duality chunked scan
+  graph_mix            — DPFL mixing-matrix aggregation (dense Eq. 4)
+  compressed_graph_mix — Eq. 4 over top-k payloads, never densified
+  sparse_graph_mix     — Eq. 4 over (N, B) neighbor lists: scalar-
+                         prefetched gather of only selected peer rows
+                         (DESIGN.md §12)
+  flash_attention      — causal GQA + sliding window, online softmax
+  rglru_scan           — RG-LRU first-order linear recurrence
+  ssd                  — Mamba2 state-space-duality chunked scan
 """
 from . import ops, ref
-from .ops import flash_attention, graph_mix, rglru_scan, ssd
+from .ops import (compressed_graph_mix, flash_attention, graph_mix,
+                  rglru_scan, sparse_graph_mix, ssd)
 
-__all__ = ["ops", "ref", "graph_mix", "flash_attention", "rglru_scan",
-           "ssd"]
+__all__ = ["ops", "ref", "graph_mix", "compressed_graph_mix",
+           "sparse_graph_mix", "flash_attention", "rglru_scan", "ssd"]

@@ -10,12 +10,14 @@ import os
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from . import ref
 from .compressed_graph_mix import compressed_graph_mix as _compressed_mix
 from .flash_attention import flash_attention as _flash
 from .graph_mix import graph_mix as _graph_mix
 from .rglru_scan import rglru_scan as _rglru_scan
+from .sparse_graph_mix import sparse_graph_mix as _sparse_mix
 from .ssd import ssd as _ssd
 
 
@@ -102,6 +104,120 @@ def compressed_graph_mix(A, vals, idx, p_dim: int,
     return shard_map(row_block, mesh=mesh,
                      in_specs=(P(ca, None), P(ca, None), P(ca, None)),
                      out_specs=P(ca, None), check_vma=False)(A, vals, idx)
+
+
+def _rotation_schedule(mesh, client_axes):
+    """Static shard-to-shard rotation plan over the (possibly multi-axis)
+    client mesh: a list of (axis_name, cumulative per-axis offsets) — one
+    single-axis cyclic ppermute per step — whose cumulative offsets visit
+    every non-zero shard offset of the torus exactly once. Row-major over
+    ``client_axes``, matching how shard_map splits the client axis."""
+    from ..sharding.compat import mesh_axis_sizes
+
+    sizes = [mesh_axis_sizes(mesh)[a] for a in client_axes]
+    steps = []
+    off = [0] * len(sizes)
+    total = 1
+    for s in sizes:
+        total *= s
+    for _ in range(total - 1):
+        # increment the multi-axis offset by one, rightmost axis fastest;
+        # each carry is one extra single-axis rotation of the panel
+        moves = []
+        for ax in reversed(range(len(sizes))):
+            off[ax] = (off[ax] + 1) % sizes[ax]
+            moves.append(client_axes[ax])
+            if off[ax] != 0:
+                break
+        steps.append((tuple(moves), tuple(off)))
+    return sizes, steps
+
+
+def sparse_graph_mix(self_w, nbr_w, nbr_idx, W_self, peer_parts=None,
+                     peer_decode=None, impl: Optional[str] = None, *,
+                     mesh=None, client_axes=None, **kw):
+    """Budget-sparse Eq.-4 mix over (N, B) neighbor lists (DESIGN.md §12):
+    ``out[n] = self_w[n]·W_self[n] + Σ_b nbr_w[n,b]·peers[idx[n,b]]``
+    with idx -1 = empty slot. ``peer_parts`` is a tuple of client-stacked
+    arrays holding what peers actually transmit (default: ``(W_self,)``);
+    ``peer_decode(*parts) -> (n, P)`` reconstructs the peer model table
+    shard-locally (identity by default) — under compression the parts are
+    the codec payload, so the simulated exchange moves encoded bytes.
+
+    With ``mesh``/``client_axes`` the op runs as a `shard_map` that
+    ROTATES the peer parts shard-to-shard (one single-axis `ppermute` per
+    step) instead of all-gathering the full (N, P) panel: each shard
+    inspects the visiting shard's panel, keeps only the rows its neighbor
+    lists request, and accumulates their weighted contribution with the
+    dispatched kernel. Peak per-shard peer storage is one (N/D, P) panel
+    (vs the dense path's (N, P) gather) and every kept row was explicitly
+    requested — the exchange is list-shaped, like the decentralized
+    system it simulates.
+    """
+    m = _impl(impl)
+    if peer_parts is None:
+        peer_parts = (W_self,)
+    if peer_decode is None:
+        peer_decode = lambda part, *_: part  # noqa: E731
+
+    def local(sw, nw, idx, ws, wp):
+        if m == "ref":
+            return ref.sparse_graph_mix_ref(sw, nw, idx, ws, wp)
+        return _sparse_mix(sw, nw, idx, ws, wp,
+                           interpret=(m == "interpret"), **kw)
+
+    if mesh is None:
+        return local(self_w, nbr_w, nbr_idx, W_self,
+                     peer_decode(*peer_parts))
+    from jax.sharding import PartitionSpec as P
+
+    from ..sharding.compat import shard_map
+
+    ca = tuple(client_axes)
+    sizes, schedule = _rotation_schedule(mesh, ca)
+    strides = []
+    acc = 1
+    for s in reversed(sizes):
+        strides.append(acc)
+        acc *= s
+    strides = list(reversed(strides))  # row-major over ca
+
+    def row_block(sw_blk, nw_blk, idx_blk, ws_blk, *parts):
+        n_loc = ws_blk.shape[0]
+        coords = [jax.lax.axis_index(a) for a in ca]
+
+        def contribution(offsets, panel_parts, with_self):
+            src = sum(((c - o) % s) * st for c, o, s, st
+                      in zip(coords, offsets, sizes, strides))
+            local_idx = idx_blk - src * n_loc
+            match = (idx_blk >= 0) & (local_idx >= 0) & \
+                (local_idx < n_loc)
+            idx_l = jnp.where(match, jnp.clip(local_idx, 0, n_loc - 1), -1)
+            w_l = jnp.where(match, nw_blk, 0.0)
+            sw = sw_blk if with_self else jnp.zeros_like(sw_blk)
+            return local(sw, w_l, idx_l, ws_blk,
+                         peer_decode(*panel_parts))
+
+        out = contribution((0,) * len(ca), parts, True)
+        panel = parts
+        for moves, offsets in schedule:
+            for axis in moves:
+                size = sizes[ca.index(axis)]
+                perm = [(i, (i + 1) % size) for i in range(size)]
+                panel = tuple(
+                    jax.lax.ppermute(x, axis, perm) for x in panel)
+            out = out + contribution(offsets, panel, False)
+        return out
+
+    part_specs = tuple(P(ca, *((None,) * (x.ndim - 1)))
+                       for x in peer_parts)
+    # check_vma=False: pallas_call has no shard_map replication rule
+    return shard_map(
+        row_block, mesh=mesh,
+        in_specs=(P(ca), P(ca, None), P(ca, None), P(ca, None))
+        + part_specs,
+        out_specs=P(ca, None), check_vma=False)(
+            self_w, nbr_w, nbr_idx, W_self, *peer_parts)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None,

@@ -21,6 +21,26 @@ def graph_mix_ref(A, W):
     return (A.astype(jnp.float32) @ W.astype(jnp.float32)).astype(W.dtype)
 
 
+def sparse_graph_mix_ref(self_w, nbr_w, nbr_idx, W_self, W_peers):
+    """Oracle for the neighbor-list Eq.-4 mix: self_w (N,), nbr_w/nbr_idx
+    (N, B) (idx -1 = empty slot), W_self/W_peers (N, P). Returns
+    ``self_w[:, None] * W_self + sum_b nbr_w[:, b] * W_peers[idx[:, b]]``
+    in fp32, cast back to W_self.dtype.
+
+    The sum unrolls over the B (static, <= budget) slots — one (N, P)
+    row-gather + fused axpy per slot — instead of materializing the
+    (N, B, P) gathered tensor and reducing it: the op is memory-bound,
+    and the 3-D intermediate costs ~2x the bytes inside the compiled
+    round (never the dense (N, N) matmul either way)."""
+    N = W_peers.shape[0]
+    w = jnp.where(nbr_idx >= 0, nbr_w, 0.0).astype(jnp.float32)
+    Wp = W_peers.astype(jnp.float32)
+    out = self_w.astype(jnp.float32)[:, None] * W_self.astype(jnp.float32)
+    for b in range(nbr_idx.shape[1]):
+        out = out + w[:, b, None] * Wp[jnp.clip(nbr_idx[:, b], 0, N - 1)]
+    return out.astype(W_self.dtype)
+
+
 def densify_topk(vals, idx, p_dim):
     """Scatter a (N, K) top-k payload back to dense (N, p_dim) fp32.
     THE single definition of the densify semantics: duplicate indices

@@ -1,0 +1,78 @@
+"""Pallas-TPU kernel for the budget-sparse Eq.-4 mix (DESIGN.md §12).
+
+Computes the neighbor-list form of the DPFL aggregation
+
+    out[n] = self_w[n] * W_self[n] + sum_b nbr_w[n, b] * W_peers[idx[n, b]]
+
+where idx is the (N, B) int32 neighbor-index table of the constrained
+greedy (B = budget << N, -1 = empty slot) and W_self / W_peers are (N, P)
+client-stacked flattened params (identical arrays in the uncompressed
+path; under compression W_peers is the decoded payload table while the
+self term stays exact — DESIGN.md §11). The dense (N, N) mixing matrix is
+never materialized and the work is O(N·B·P) instead of O(N²·P).
+
+The gather is expressed through `pltpu.PrefetchScalarGridSpec`: the
+neighbor table is a scalar-prefetch operand, so the BlockSpec index map
+of the peer panel reads ``idx[n, b]`` and DMAs ONLY the selected peer's
+column panel into VMEM — grid (P panels, N clients, B slots) with the
+panel index outermost so the fp32 output block stays resident across the
+whole (n, b) sweep. Sentinel slots arrive clamped to row 0 with weight
+0.0 (exact no-ops), so the kernel body is branch-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, sw_ref, nw_ref, wself_ref, wpeer_ref, o_ref):
+    del idx_ref  # consumed by the BlockSpec index maps
+    b = pl.program_id(2)
+
+    @pl.when(b == 0)
+    def _init():
+        o_ref[...] = sw_ref[0, 0] * wself_ref[...].astype(jnp.float32)
+
+    o_ref[...] += nw_ref[0, 0] * wpeer_ref[...].astype(jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_p", "interpret"))
+def sparse_graph_mix(self_w, nbr_w, nbr_idx, W_self, W_peers, *,
+                     block_p: int = 2048, interpret: bool = False):
+    """self_w: (N,) fp32; nbr_w/nbr_idx: (N, B) fp32/int32 (idx in
+    [0, N) or -1 with nbr_w 0); W_self/W_peers: (N, P). Returns (N, P)
+    fp32-accumulated mix, cast to W_self.dtype."""
+    N, B = nbr_idx.shape
+    P = W_self.shape[1]
+    bp = min(block_p, P)
+    pad = (-P) % bp
+    if pad:
+        W_self = jnp.pad(W_self, ((0, 0), (0, pad)))
+        W_peers = jnp.pad(W_peers, ((0, 0), (0, pad)))
+    Pp = P + pad
+    safe_idx = jnp.clip(nbr_idx, 0, N - 1).astype(jnp.int32)
+    zero_w = jnp.where(nbr_idx >= 0, nbr_w, 0.0).astype(jnp.float32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Pp // bp, N, B),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda pi, n, b, idx: (n, 0)),
+            pl.BlockSpec((1, 1), lambda pi, n, b, idx: (n, b)),
+            pl.BlockSpec((1, bp), lambda pi, n, b, idx: (n, pi)),
+            pl.BlockSpec((1, bp), lambda pi, n, b, idx: (idx[n, b], pi)),
+        ],
+        out_specs=pl.BlockSpec((1, bp), lambda pi, n, b, idx: (n, pi)),
+    )
+    out = pl.pallas_call(
+        _kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, Pp), jnp.float32),
+        interpret=interpret,
+    )(safe_idx, self_w[:, None].astype(jnp.float32), zero_w,
+      W_self, W_peers)
+    out = out[:, :P] if pad else out
+    return out.astype(W_self.dtype)

@@ -46,7 +46,7 @@ def build_engine_step(n_clients: int, n_train: int, n_val: int, tau: int,
                       participation: float = 1.0,
                       avail_model: str = "bernoulli",
                       compress: str = "none", topk_frac: float = 0.1,
-                      quant_bits: int = 8):
+                      quant_bits: int = 8, graph_repr: str = "dense"):
     """Client-sharded FLEngine + the cached DPFL round_step + an abstract
     RoundState, ready to lower. ``participation < 1`` lowers the
     participation-aware step (availability schedule in aux, restricted
@@ -68,7 +68,7 @@ def build_engine_step(n_clients: int, n_train: int, n_val: int, tau: int,
         codec=compress, topk_frac=topk_frac, quant_bits=quant_bits)
     cfg = DPFLConfig(rounds=1, tau_train=tau, budget=budget,
                      track_history=False, participation=part,
-                     compression=comp)
+                     compression=comp, graph_repr=graph_repr)
     return dpfl_round_step(engine, cfg), abstract_round_state(engine, cfg), \
         mesh
 
@@ -96,6 +96,11 @@ def main():
                     help="topk codec: fraction of P transmitted")
     ap.add_argument("--quant-bits", type=int, default=8,
                     help="int8 codec: wire bits per coordinate")
+    ap.add_argument("--graph-repr", default="dense",
+                    choices=["dense", "sparse"],
+                    help="collaboration-graph layout: dense (N, N) masks "
+                         "or budget-sparse (N, B) neighbor lists "
+                         "(DESIGN.md §12)")
     ap.add_argument("--out", default="benchmarks/results/dryrun",
                     help="output dir for the JSON record; --out '' is a "
                          "deprecated alias for --no-out")
@@ -111,7 +116,7 @@ def main():
     step, state, mesh = build_engine_step(
         args.clients, args.n_train, args.n_val, args.tau, args.budget,
         args.pods, args.devices, args.participation, args.avail_model,
-        args.compress, args.topk_frac, args.quant_bits)
+        args.compress, args.topk_frac, args.quant_bits, args.graph_repr)
     lowered = step.lower(state)
     compiled = lowered.compile()
     print("memory_analysis:", compiled.memory_analysis())
@@ -119,7 +124,8 @@ def main():
            "clients": args.clients, "tau": args.tau, "budget": args.budget,
            "devices": args.devices, "pods": args.pods,
            "participation": args.participation,
-           "compress": args.compress, "status": "ok"}
+           "compress": args.compress, "graph_repr": args.graph_repr,
+           "status": "ok"}
     rec.update(analyze_compiled(compiled, mesh.devices.size))
     rec["compile_s"] = time.time() - t0
     rl = rec["roofline"]

@@ -193,3 +193,123 @@ def test_sharded_participation_matches_single_device():
     r = _run(PARTICIPATION_CODE)
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
     assert r.stdout.count("OK") == 3
+
+
+SPARSE_MIX_CODE = r"""
+import sys; sys.path.insert(0, "src")
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.kernels import ops
+from repro.kernels.ref import densify_topk, sparse_graph_mix_ref
+from repro.launch.mesh import make_client_mesh
+
+for pods in (1, 2):  # single client axis AND the 2D (pod, data) torus
+    mesh = make_client_mesh(8, pods=pods)
+    ca = ("pod", "data")
+    key = jax.random.PRNGKey(pods)
+    for N, B, P in [(8, 3, 257), (16, 4, 2048), (16, 6, 31)]:
+        W = jax.random.normal(key, (N, P))
+        idx = jax.random.randint(jax.random.fold_in(key, 1), (N, B), -1, N)
+        nw = jax.random.normal(jax.random.fold_in(key, 2), (N, B))
+        sw = jax.random.normal(jax.random.fold_in(key, 3), (N,))
+        want = np.asarray(sparse_graph_mix_ref(sw, nw, idx, W, W))
+        for impl in ["ref", "interpret"]:
+            got = np.asarray(ops.sparse_graph_mix(
+                sw, nw, idx, W, impl=impl, mesh=mesh, client_axes=ca))
+            err = np.abs(got - want).max()
+            assert err < 1e-5, (pods, N, B, P, impl, err)
+            print("OK", pods, N, B, P, impl)
+    # compressed parts ride the rotation: the collective moves (vals, idx)
+    N, B, P, K = 16, 4, 120, 12
+    W = jax.random.normal(key, (N, P))
+    idx = jax.random.randint(jax.random.fold_in(key, 4), (N, B), -1, N)
+    nw = jax.random.normal(jax.random.fold_in(key, 5), (N, B))
+    sw = jax.random.normal(jax.random.fold_in(key, 6), (N,))
+    _, tid = jax.lax.top_k(jnp.abs(W), K)
+    tv = jnp.take_along_axis(W, tid, axis=1)
+    dec = densify_topk(tv, tid.astype(jnp.int32), P)
+    want = np.asarray(sparse_graph_mix_ref(sw, nw, idx, W, dec))
+    got = np.asarray(ops.sparse_graph_mix(
+        sw, nw, idx, W, (tv, tid.astype(jnp.int32)),
+        lambda v, i: densify_topk(v, i, P), mesh=mesh, client_axes=ca))
+    assert np.abs(got - want).max() < 1e-5, pods
+    print("OK", pods, "topk-parts")
+    # int8-style parts: the (N,) fp32 scale rides the rotation as a 1-D
+    # P(ca) operand next to the int8 q panel
+    q = jnp.round(W * 10).astype(jnp.int8)
+    s = jnp.abs(jax.random.normal(jax.random.fold_in(key, 7), (N,)))
+    dec8 = q.astype(jnp.float32) * s[:, None]
+    want = np.asarray(sparse_graph_mix_ref(sw, nw, idx, W, dec8))
+    got = np.asarray(ops.sparse_graph_mix(
+        sw, nw, idx, W, (q, s),
+        lambda qq, ss: qq.astype(jnp.float32) * ss[:, None],
+        mesh=mesh, client_axes=ca))
+    assert np.abs(got - want).max() < 1e-5, pods
+    print("OK", pods, "int8-parts")
+"""
+
+
+def test_sparse_mix_rotation_matches_ref():
+    """The neighbor-list mix's shard_map path — peer panels rotated
+    shard-to-shard via ppermute, only requested rows kept (DESIGN.md
+    §12) — equals the single-device oracle on 1D and 2D client meshes,
+    for raw, topk and int8 peer parts, under both kernel impls."""
+    r = _run(SPARSE_MIX_CODE)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert r.stdout.count("OK") == 16
+
+
+SPARSE_ENGINE_CODE = r"""
+import sys; sys.path.insert(0, "src"); sys.path.insert(0, ".")
+import numpy as np
+from benchmarks.common import standard_setting
+from repro.core import CompressionConfig, DPFLConfig, run_dpfl
+from repro.launch.mesh import make_client_mesh
+
+def pair(**kw):
+    _, _, e1 = standard_setting(n_clients=8)
+    single = run_dpfl(e1, DPFLConfig(**kw))
+    _, _, e2 = standard_setting(n_clients=8)
+    e2.shard_clients(make_client_mesh(8))
+    sharded = run_dpfl(e2, DPFLConfig(**kw))
+    return single, sharded
+
+# --- decision-free path: the graph (and so every counter) is layout-
+# independent; params agree to fp tolerance (the rotation accumulates
+# peer contributions in visit order, not slot order — DESIGN.md s12)
+kw = dict(rounds=4, tau_init=2, tau_train=1, budget=3, seed=0,
+          random_graph=True, graph_repr="sparse")
+s, h = pair(**kw)
+assert s.comm_preprocess == h.comm_preprocess == 8 * 3
+assert s.comm_downloads == h.comm_downloads
+for a, b in zip(s.graph_history, h.graph_history):
+    np.testing.assert_array_equal(a, b)
+np.testing.assert_allclose(s.test_acc, h.test_acc, atol=1e-5)
+print("OK sparse random_graph")
+
+# --- greedy path (+ topk compression): robust invariants per s8/s12
+kw = dict(rounds=3, tau_init=2, tau_train=1, budget=3, seed=0,
+          graph_repr="sparse",
+          compression=CompressionConfig(codec="topk", topk_frac=0.3))
+s, h = pair(**kw)
+np.testing.assert_array_equal(s.omega, h.omega)
+assert s.comm_preprocess == h.comm_preprocess == 2 * 8 * 7
+assert s.comm_downloads == h.comm_downloads
+assert s.comm_bytes == h.comm_bytes
+assert abs(s.test_acc.mean() - h.test_acc.mean()) < 0.05
+for adj in h.graph_history:
+    assert (adj.sum(1) - 1 <= 3).all()  # budget respected on every shard
+print("OK sparse ggc robust")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_sparse_engine_matches_single_device():
+    """run_dpfl with graph_repr='sparse' under the 8-device client mesh:
+    neighbor lists shard over clients, the mix runs the rotation
+    exchange, and the refresh probes only shard-local candidate lists —
+    matching the single-device sparse build exactly on the integer
+    invariants and within the greedy-noise envelope on accuracy."""
+    r = _run(SPARSE_ENGINE_CODE)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert r.stdout.count("OK") == 2
