@@ -87,15 +87,27 @@ def _time_rounds(engine, cfg_kw, rounds, repeats=3):
     """rounds/sec of `run_dpfl`, preprocessing excluded by subtracting
     the best 0-round run from the best full run (the perf_hillclimb
     protocol, with min-of-repeats on BOTH terms so preprocessing jitter
-    cannot drive the difference negative at small N)."""
+    cannot drive the difference negative at small N). The timed repeats
+    run under a `recompile_sentinel`: the warm run at the same round
+    count must leave NOTHING to compile, or the sweep would compare
+    compile times, not round throughput."""
+    import contextlib
+
+    from repro.analysis.guards import recompile_sentinel
+    from repro.core.dpfl import dpfl_round_step
 
     def best_of(r):
-        run_dpfl(engine, DPFLConfig(rounds=r, **cfg_kw))  # warm compiles
+        cfg = DPFLConfig(rounds=r, **cfg_kw)
+        run_dpfl(engine, cfg)  # warm compiles at this exact round count
+        guard = recompile_sentinel(dpfl_round_step(engine, cfg),
+                                   expect_new=0) \
+            if r else contextlib.nullcontext()
         best = float("inf")
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            run_dpfl(engine, DPFLConfig(rounds=r, **cfg_kw))
-            best = min(best, time.perf_counter() - t0)
+        with guard:
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                run_dpfl(engine, cfg)
+                best = min(best, time.perf_counter() - t0)
         return best
 
     pre = best_of(0)
@@ -162,10 +174,14 @@ def _mesh_worker(n_clients, budget, devices, repeats=3):
     key = jax.random.PRNGKey(1)
     jax.block_until_ready(jf(key, flat))  # compile
     best = float("inf")
-    for _ in range(repeats):
-        t0 = time.time()
-        jax.block_until_ready(jf(key, flat))
-        best = min(best, time.time() - t0)
+    # the timed loop is pure re-dispatch of one compiled build: fence it
+    # against hidden host<->device transfers and fresh compiles
+    from repro.analysis.guards import no_transfer, recompile_sentinel
+    with no_transfer(), recompile_sentinel(jf, expect_new=0):
+        for _ in range(repeats):
+            t0 = time.time()
+            jax.block_until_ready(jf(key, flat))
+            best = min(best, time.time() - t0)
     print(f"ggc_mesh,N={n_clients},B={budget},devices={devices},"
           f"{best * 1e3:.1f}ms")
 

@@ -27,12 +27,14 @@ def _time(fn, *args, reps=5):
 
 
 def run(bench: Bench):
-    key = jax.random.PRNGKey(0)
+    # one subkey per tensor: reusing a key across same-shape normal()
+    # draws yields identical samples (tracelint T5)
+    keys = iter(jax.random.split(jax.random.PRNGKey(0), 10))
 
     # graph_mix at FL scale: 100 clients x 0.1M-param CNN
     N, P = 100, 120_000
-    A = jax.nn.softmax(jax.random.normal(key, (N, N)))
-    W = jax.random.normal(key, (N, P))
+    A = jax.nn.softmax(jax.random.normal(next(keys), (N, N)))
+    W = jax.random.normal(next(keys), (N, P))
     jref = jax.jit(ref.graph_mix_ref)
     s, _ = _time(jref, A, W)
     out_i = graph_mix(A[:8, :8], W[:8, :2048], block_p=512, interpret=True)
@@ -42,9 +44,9 @@ def run(bench: Bench):
 
     # flash attention (ref timing at medium scale; interpret correctness)
     B, S, Hq, Hkv, hd = 1, 1024, 8, 4, 64
-    q = jax.random.normal(key, (B, S, Hq, hd)) * 0.5
-    k = jax.random.normal(key, (B, S, Hkv, hd)) * 0.5
-    v = jax.random.normal(key, (B, S, Hkv, hd))
+    q = jax.random.normal(next(keys), (B, S, Hq, hd)) * 0.5
+    k = jax.random.normal(next(keys), (B, S, Hkv, hd)) * 0.5
+    v = jax.random.normal(next(keys), (B, S, Hkv, hd))
     jatt = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
     s, _ = _time(jatt, q, k, v)
     o = flash_attention(q[:, :256], k[:, :256], v[:, :256], block_q=128,
@@ -55,8 +57,9 @@ def run(bench: Bench):
     bench.record("kernels/flash_attention_1k", s, f"interp_err={err:.2e}")
 
     # rglru scan
-    a = jax.nn.sigmoid(jax.random.normal(key, (2, 2048, 1024))) * 0.2 + 0.79
-    b = jax.random.normal(key, (2, 2048, 1024)) * 0.1
+    a = jax.nn.sigmoid(
+        jax.random.normal(next(keys), (2, 2048, 1024))) * 0.2 + 0.79
+    b = jax.random.normal(next(keys), (2, 2048, 1024)) * 0.1
     jscan = jax.jit(lambda a, b: ref.linear_scan_ref(a, b))
     s, _ = _time(jscan, a, b)
     o, _ = rglru_scan(a[:, :256, :256], b[:, :256, :256], block_s=128,
@@ -66,10 +69,10 @@ def run(bench: Bench):
                  f"interp_err={float(jnp.abs(o - ro).max()):.2e}")
 
     # ssd
-    x = jax.random.normal(key, (1, 2048, 8, 64)) * 0.3
-    da = -jnp.abs(jax.random.normal(key, (1, 2048, 8))) * 0.1
-    Bm = jax.random.normal(key, (1, 2048, 64)) * 0.3
-    Cm = jax.random.normal(key, (1, 2048, 64)) * 0.3
+    x = jax.random.normal(next(keys), (1, 2048, 8, 64)) * 0.3
+    da = -jnp.abs(jax.random.normal(next(keys), (1, 2048, 8))) * 0.1
+    Bm = jax.random.normal(next(keys), (1, 2048, 64)) * 0.3
+    Cm = jax.random.normal(next(keys), (1, 2048, 64)) * 0.3
     jssd = jax.jit(lambda *a: ref.ssd_ref(*a, 256))
     s, _ = _time(jssd, x, da, Bm, Cm)
     y, _ = ssd(x[:, :256], da[:, :256], Bm[:, :256], Cm[:, :256],

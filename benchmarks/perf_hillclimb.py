@@ -81,30 +81,45 @@ def bench_dpfl_rounds(rounds=10, n_clients=16, repeats=2, out=None,
     the budget-sparse neighbor-list engine (DESIGN.md §12; the committed
     baseline stays dense — `bench_ggc_scaling --sparse-sweep` is the
     dense-vs-sparse crossover harness)."""
+    import contextlib
+
+    from repro.analysis.guards import recompile_sentinel
     from repro.core import DPFLConfig, run_dpfl, run_dpfl_reference
+    from repro.core.dpfl import dpfl_round_step
     from benchmarks.common import standard_setting
 
     _, _, engine = standard_setting(n_clients=n_clients)
     kw = dict(tau_init=2, tau_train=2, budget=4, seed=0,
               track_history=False, graph_repr=graph_repr)
+    cfg = DPFLConfig(rounds=rounds, **kw)
 
-    def time_path(fn, label):
-        fn(engine, DPFLConfig(rounds=1, **kw))  # warm up compiles
+    def time_path(fn, label, step=None):
+        # warm at the FULL round count: aux comm counters are shaped
+        # (rounds,), so warming at rounds=1 would leave a hidden
+        # recompile inside the timed region (tracelint T-hygiene)
+        fn(engine, cfg)
         t0 = time.perf_counter()
         fn(engine, DPFLConfig(rounds=0, **kw))
         pre = time.perf_counter() - t0
+        # the engine path times pure re-dispatch: its round_step must not
+        # gain a single cache entry across the timed repeats (the host
+        # reference loop has no compiled step to pin down)
+        guard = recompile_sentinel(step, expect_new=0) \
+            if step is not None else contextlib.nullcontext()
         best = float("inf")
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            fn(engine, DPFLConfig(rounds=rounds, **kw))
-            best = min(best, time.perf_counter() - t0 - pre)
+        with guard:
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                fn(engine, cfg)
+                best = min(best, time.perf_counter() - t0 - pre)
         rps = rounds / best
         print(f"dpfl,{label},ok,{best:.3f},{rps:.3f},,,,")
         return rps
 
     print("pair,tag,status,loop_s,rounds_per_s,,,,")
     ref = time_path(run_dpfl_reference, "host_loop")
-    new = time_path(run_dpfl, "round_engine")
+    new = time_path(run_dpfl, "round_engine",
+                    step=dpfl_round_step(engine, cfg))
     print(f"dpfl,speedup,ok,,{new / ref:.2f}x,,,,")
     results_dir = os.path.join(ROOT, "benchmarks", "results")
     os.makedirs(results_dir, exist_ok=True)
@@ -128,7 +143,9 @@ def bench_dpfl_mesh_worker(rounds, n_clients, devices, repeats=2,
     import jax
 
     from benchmarks.common import standard_setting
+    from repro.analysis.guards import recompile_sentinel
     from repro.core import DPFLConfig, run_dpfl
+    from repro.core.dpfl import dpfl_round_step
     from repro.launch.mesh import make_client_mesh
 
     assert len(jax.devices()) == devices, \
@@ -138,15 +155,17 @@ def bench_dpfl_mesh_worker(rounds, n_clients, devices, repeats=2,
         engine.shard_clients(make_client_mesh(devices))
     kw = dict(tau_init=2, tau_train=2, budget=4, seed=0,
               track_history=False, graph_repr=graph_repr)
-    run_dpfl(engine, DPFLConfig(rounds=1, **kw))  # warm up compiles
+    cfg = DPFLConfig(rounds=rounds, **kw)
+    run_dpfl(engine, cfg)  # warm at the full round count (see time_path)
     t0 = _time.perf_counter()
     run_dpfl(engine, DPFLConfig(rounds=0, **kw))
     pre = _time.perf_counter() - t0
     best = float("inf")
-    for _ in range(repeats):
-        t0 = _time.perf_counter()
-        run_dpfl(engine, DPFLConfig(rounds=rounds, **kw))
-        best = min(best, _time.perf_counter() - t0 - pre)
+    with recompile_sentinel(dpfl_round_step(engine, cfg), expect_new=0):
+        for _ in range(repeats):
+            t0 = _time.perf_counter()
+            run_dpfl(engine, cfg)
+            best = min(best, _time.perf_counter() - t0 - pre)
     print(f"dpfl_mesh,devices={devices},ok,{best:.3f},"
           f"{rounds / best:.3f},,,,")
 

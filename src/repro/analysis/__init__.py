@@ -1,0 +1,32 @@
+"""Trace-hygiene tooling for the compiled round engine (DESIGN.md §13).
+
+Two layers:
+
+* :mod:`repro.analysis.tracelint` — a static AST linter for the JAX/Pallas
+  pitfalls this codebase has actually hit (rules T1–T6), with a CLI at
+  ``python -m repro.analysis.lint``.
+* :mod:`repro.analysis.guards` — runtime guards: ``no_transfer()`` regions,
+  ``recompile_sentinel()`` compile-count assertions, and the
+  ``donation_report()`` buffer-donation audit.
+
+The linter layer is dependency-free (stdlib ``ast`` only) so the CLI runs
+without importing jax; ``guards`` imports jax and is therefore loaded
+lazily via module ``__getattr__``.
+"""
+
+_GUARD_EXPORTS = (
+    "no_transfer", "allow_transfers", "recompile_sentinel",
+    "RecompileError", "TransferError", "donation_report",
+)
+
+__all__ = ["tracelint"] + list(_GUARD_EXPORTS)
+
+
+def __getattr__(name):
+    import importlib
+    if name in ("guards", "tracelint"):
+        return importlib.import_module(f".{name}", __name__)
+    if name in _GUARD_EXPORTS:
+        mod = importlib.import_module(".guards", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,65 @@
+"""CLI for the trace-hygiene linter (DESIGN.md §13).
+
+    python -m repro.analysis.lint src benchmarks examples
+    python -m repro.analysis.lint src --format=json
+    python -m repro.analysis.lint --list-rules
+
+Exit status is non-zero iff any unsuppressed finding remains. Suppress a
+deliberate construct per line with ``# tracelint: disable=Txx`` (or a bare
+``disable``) plus a comment justifying it.
+
+Stdlib-only: this entrypoint never imports jax, so it runs in a bare
+checkout (the CI ``tracelint`` job installs nothing).
+"""
+import argparse
+import json
+import sys
+
+from .tracelint import RULES, lint_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="AST trace-hygiene linter for JAX/Pallas code "
+                    "(rules T1-T6; see DESIGN.md §13)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories to lint (recursively)")
+    ap.add_argument("--format", choices=["text", "json"], default="text",
+                    help="output format (json: one object with a "
+                         "`findings` list)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print findings silenced by "
+                         "`# tracelint: disable=...` lines")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, desc in sorted(RULES.items()):
+            print(f"{rid}  {desc}")
+        return 0
+    if not args.paths:
+        ap.error("no paths given (or use --list-rules)")
+
+    findings, n_files = lint_paths(args.paths)
+    active = [f for f in findings if not f.suppressed]
+    suppressed = [f for f in findings if f.suppressed]
+    shown = findings if args.show_suppressed else active
+
+    if args.format == "json":
+        print(json.dumps(
+            {"version": 1, "files": n_files,
+             "suppressed": len(suppressed),
+             "findings": [f.to_dict() for f in shown]}, indent=1))
+    else:
+        for f in shown:
+            tag = " (suppressed)" if f.suppressed else ""
+            print(f.render() + tag)
+        print(f"{n_files} files, {len(active)} findings "
+              f"({len(suppressed)} suppressed)")
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,757 @@
+"""Static trace-hygiene linter for JAX/Pallas code (DESIGN.md §13).
+
+Pure-stdlib AST analysis — importing this module never imports jax, so the
+CLI (``python -m repro.analysis.lint``) runs anywhere. The rules target the
+pitfall classes this codebase has actually shipped or narrowly avoided:
+
+  T1  ``jax.device_put`` (or ``jnp.asarray(..., device=...)``) assigned to a
+      value that is closed over by a traced function. ``jit`` treats closure
+      constants as baked-in operands and ignores their placement — the PR 2
+      bug class.
+  T2  host-sync calls inside traced code: ``.item()``, ``.tolist()``,
+      ``float()/int()/bool()`` on traced values, ``np.asarray``, ``print``,
+      ``jax.device_get``, ``.block_until_ready()``. Each forces a transfer
+      or fails at trace time; ``jax.debug.print`` is the traced-safe spelling.
+  T3  Python ``if``/``while`` (and ternaries) branching on a traced argument
+      — a ``TracerBoolConversionError`` at best, a silently-specialized
+      program at worst. Shape/dtype/``is None``/string-equality tests are
+      static and exempt.
+  T4  ``np.*`` constructors inside traced code: NumPy results are strongly
+      typed, so they poison weak-type promotion and pin host-computed
+      constants into the jaxpr. Use ``jnp`` inside traces.
+  T5  PRNG-key reuse: a sampler consuming the same key across loop
+      iterations (missing ``split``/``fold_in``), or two samplers consuming
+      one key binding in straight-line code.
+  T6  Pallas: ``pl.BlockSpec`` index maps capturing enclosing-function
+      Python state (baked in at trace time, a silent-staleness/recompile
+      hazard), and ``*_ref[...]`` accesses outside a kernel body.
+
+Suppression: append ``# tracelint: disable=T2`` (or ``disable=T2,T5`` or a
+bare ``disable``) to the flagged line. Suppressions should carry a comment
+justifying why the construct is intentional.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+RULES: Dict[str, str] = {
+    "T1": "device placement on a value closed over by a traced function",
+    "T2": "host-sync call inside traced code",
+    "T3": "Python control flow branching on a traced argument",
+    "T4": "numpy constructor inside traced code (dtype poisoning)",
+    "T5": "PRNG key reuse (missing split/fold_in)",
+    "T6": "Pallas index_map captures Python state / ref access outside kernel",
+}
+
+# Transforms whose function argument (or decorated function) is traced.
+_TRACE_WRAPPERS = {
+    "jax.jit", "jax.pmap", "jax.vmap", "jax.grad", "jax.value_and_grad",
+    "jax.jacfwd", "jax.jacrev", "jax.hessian", "jax.linearize", "jax.vjp",
+    "jax.checkpoint", "jax.remat", "jax.custom_jvp", "jax.custom_vjp",
+    "jax.experimental.shard_map.shard_map",
+    "jax.experimental.pallas.pallas_call",
+}
+# Higher-order jax.lax control flow: callable args are traced too.
+_TRACING_HOFS = _TRACE_WRAPPERS | {
+    "jax.lax.scan", "jax.lax.cond", "jax.lax.while_loop",
+    "jax.lax.fori_loop", "jax.lax.switch", "jax.lax.map",
+    "jax.lax.associative_scan",
+}
+_PALLAS_CALL = "jax.experimental.pallas.pallas_call"
+_BLOCKSPEC = "jax.experimental.pallas.BlockSpec"
+
+# jax.random.* that CONSUME a key (reuse is a correctness bug) vs. the
+# derivation helpers that legitimately take a key many times.
+_KEY_CONSUMERS = {
+    "ball", "bernoulli", "beta", "binomial", "bits", "categorical",
+    "cauchy", "chisquare", "choice", "dirichlet", "double_sided_maxwell",
+    "exponential", "gamma", "geometric", "gumbel", "laplace", "loggamma",
+    "logistic", "lognormal", "maxwell", "multivariate_normal", "normal",
+    "orthogonal", "pareto", "permutation", "poisson", "rademacher",
+    "randint", "rayleigh", "shuffle", "t", "triangular", "truncated_normal",
+    "uniform", "wald", "weibull_min",
+}
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding",
+                 "weak_type"}
+
+_NP_CTORS = {
+    "array", "ones", "zeros", "full", "empty", "arange", "linspace", "eye",
+    "concatenate", "stack", "where", "sum", "mean", "prod", "cumsum",
+    "float16", "float32", "float64", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_",
+}
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*tracelint:\s*disable(?:=(?P<rules>[A-Za-z0-9,\s]+))?")
+
+_FACTORY_RE = re.compile(r"^_?make_")
+_REF_NAME_RE = re.compile(r"^(\w*_ref|ref)$")
+
+
+@dataclasses.dataclass
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+    suppressed: bool = False
+
+    def to_dict(self) -> dict:
+        return {"path": self.path, "line": self.line, "col": self.col,
+                "rule": self.rule, "message": self.message,
+                "suppressed": self.suppressed}
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+               f"{self.message}"
+
+
+def _qual(node: ast.AST) -> Optional[str]:
+    """Dotted name for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Imports:
+    """Alias resolution built from a module's import statements."""
+
+    def __init__(self, tree: ast.Module):
+        self.mod_alias: Dict[str, str] = {}   # alias -> module dotted path
+        self.from_name: Dict[str, str] = {}   # name -> full dotted path
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.mod_alias[a.asname or a.name.split(".")[0]] = \
+                        a.name if a.asname else a.name.split(".")[0]
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.from_name[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+
+    def resolve(self, q: Optional[str]) -> Optional[str]:
+        if not q:
+            return None
+        head, _, rest = q.partition(".")
+        if head in self.from_name:
+            base = self.from_name[head]
+        elif head in self.mod_alias:
+            base = self.mod_alias[head]
+        else:
+            base = head
+        return f"{base}.{rest}" if rest else base
+
+
+@dataclasses.dataclass
+class _FnInfo:
+    node: ast.AST                      # FunctionDef | AsyncFunctionDef | Lambda
+    parent: Optional["_FnInfo"]
+    name: str
+    params: Set[str]
+    static_params: Set[str] = dataclasses.field(default_factory=set)
+    traced_seed: bool = False
+    kernel_seed: bool = False
+    traced: bool = False               # effective, after propagation
+    kernel: bool = False
+
+    def direct_bound(self) -> Set[str]:
+        """Names bound at this function's own level (params + stores),
+        not descending into nested functions."""
+        out = set(self.params)
+        body = self.node.body if not isinstance(self.node, ast.Lambda) \
+            else [self.node.body]
+        stack = list(body)
+        while stack:
+            n = stack.pop()
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.add(n.name)
+                continue
+            if isinstance(n, ast.Lambda):
+                continue
+            if isinstance(n, ast.Name) and isinstance(
+                    n.ctx, (ast.Store, ast.Del)):
+                out.add(n.id)
+            stack.extend(ast.iter_child_nodes(n))
+        return out
+
+
+def _params_of(fn: ast.AST) -> Set[str]:
+    a = fn.args
+    names = [p.arg for p in
+             list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+def _loads(sub: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(sub)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+
+
+def _binds(sub: ast.AST) -> Set[str]:
+    out = set()
+    for n in ast.walk(sub):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, (ast.Store, ast.Del)):
+            out.add(n.id)
+        elif isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.add(n.name)
+            out |= _params_of(n)
+        elif isinstance(n, ast.Lambda):
+            out |= _params_of(n)
+        elif isinstance(n, ast.ExceptHandler) and n.name:
+            out.add(n.name)
+        elif isinstance(n, (ast.Import, ast.ImportFrom)):
+            for a in n.names:
+                out.add((a.asname or a.name).split(".")[0])
+    return out
+
+
+class _ModuleLinter:
+    def __init__(self, src: str, path: str):
+        self.src = src
+        self.path = path
+        self.tree = ast.parse(src, filename=path)
+        self.imports = _Imports(self.tree)
+        self.findings: List[Finding] = []
+        self.parent: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parent[child] = node
+        self.fninfo: Dict[ast.AST, _FnInfo] = {}
+        self._collect_functions()
+        self._seed_traced()
+        self._propagate()
+
+    # ---- scope machinery -------------------------------------------------
+    def _collect_functions(self):
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                name = getattr(node, "name", "<lambda>")
+                self.fninfo[node] = _FnInfo(
+                    node=node, parent=None, name=name,
+                    params=_params_of(node))
+        for node, info in self.fninfo.items():
+            p = self.parent.get(node)
+            while p is not None and p not in self.fninfo:
+                p = self.parent.get(p)
+            info.parent = self.fninfo.get(p)
+
+    def _enclosing_fn(self, node: ast.AST) -> Optional[_FnInfo]:
+        p = self.parent.get(node)
+        while p is not None and p not in self.fninfo:
+            p = self.parent.get(p)
+        return self.fninfo.get(p)
+
+    def _resolve_callable_arg(self, arg: ast.AST, scope: Optional[_FnInfo],
+                              depth: int = 0) -> List[ast.AST]:
+        """Function nodes an HOF argument may refer to (Name lookup through
+        enclosing scopes, Lambda direct, functools.partial unwrapped, and
+        simple `k = functools.partial(f, ...)` assignment chains)."""
+        if depth > 6:
+            return []
+        if isinstance(arg, ast.Lambda):
+            return [arg]
+        if isinstance(arg, ast.Call) and \
+                self.imports.resolve(_qual(arg.func)) == "functools.partial" \
+                and arg.args:
+            return self._resolve_callable_arg(arg.args[0], scope, depth + 1)
+        if isinstance(arg, ast.Name):
+            # find a def with this name visible from `scope`
+            want = arg.id
+            chain: List[Optional[_FnInfo]] = []
+            s = scope
+            while s is not None:
+                chain.append(s)
+                s = s.parent
+            chain.append(None)  # module level
+            for s in chain:
+                for node, info in self.fninfo.items():
+                    if info.name == want and info.parent is s and \
+                            isinstance(node, (ast.FunctionDef,
+                                              ast.AsyncFunctionDef)):
+                        return [node]
+                # name bound by assignment at this level (lambda or a
+                # partial/alias chain ending in a def)
+                for n in ast.walk(s.node if s else self.tree):
+                    if isinstance(n, ast.Assign) and \
+                            self._enclosing_fn(n) is s and \
+                            any(isinstance(t, ast.Name) and t.id == want
+                                for t in n.targets):
+                        if isinstance(n.value, ast.Lambda):
+                            return [n.value]
+                        if isinstance(n.value, (ast.Call, ast.Name)):
+                            r = self._resolve_callable_arg(
+                                n.value, s, depth + 1)
+                            if r:
+                                return r
+        return []
+
+    def _decorator_traced(self, fn: ast.AST) -> bool:
+        for dec in getattr(fn, "decorator_list", []):
+            q = self.imports.resolve(_qual(dec))
+            if q in _TRACE_WRAPPERS:
+                return True
+            if isinstance(dec, ast.Call):
+                qf = self.imports.resolve(_qual(dec.func))
+                if qf in _TRACE_WRAPPERS:
+                    return True
+                if qf == "functools.partial" and dec.args and \
+                        self.imports.resolve(_qual(dec.args[0])) in \
+                        _TRACE_WRAPPERS:
+                    self._note_static_params(fn, dec)
+                    return True
+        return False
+
+    def _note_static_params(self, fn: ast.AST, jit_call: ast.Call):
+        info = self.fninfo[fn]
+        for kw in jit_call.keywords:
+            if kw.arg in ("static_argnames",):
+                for n in ast.walk(kw.value):
+                    if isinstance(n, ast.Constant) and isinstance(n.value,
+                                                                  str):
+                        info.static_params.add(n.value)
+            elif kw.arg in ("static_argnums",):
+                pos = [p.arg for p in fn.args.args]
+                for n in ast.walk(kw.value):
+                    if isinstance(n, ast.Constant) and \
+                            isinstance(n.value, int) and \
+                            0 <= n.value < len(pos):
+                        info.static_params.add(pos[n.value])
+
+    def _seed_traced(self):
+        # (a) decorators
+        for node, info in self.fninfo.items():
+            if self._decorator_traced(node):
+                info.traced_seed = True
+        # (b) HOF call sites + pallas kernels
+        for call in ast.walk(self.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            q = self.imports.resolve(_qual(call.func))
+            if q not in _TRACING_HOFS:
+                continue
+            scope = self._enclosing_fn(call)
+            cargs = list(call.args) + [kw.value for kw in call.keywords
+                                       if kw.arg not in ("static_argnames",
+                                                         "static_argnums")]
+            for i, arg in enumerate(cargs):
+                for fn in self._resolve_callable_arg(arg, scope):
+                    self.fninfo[fn].traced_seed = True
+                    if q == _PALLAS_CALL and i == 0:
+                        self.fninfo[fn].kernel_seed = True
+                    if q in ("jax.jit",):
+                        for kw in call.keywords:
+                            if kw.arg == "static_argnames":
+                                for n in ast.walk(kw.value):
+                                    if isinstance(n, ast.Constant) and \
+                                            isinstance(n.value, str):
+                                        self.fninfo[fn].static_params.add(
+                                            n.value)
+        # (b') functools.partial keyword bindings are Python values at
+        # partial-construction time: static parameters of the wrapped fn
+        for call in ast.walk(self.tree):
+            if isinstance(call, ast.Call) and \
+                    self.imports.resolve(_qual(call.func)) == \
+                    "functools.partial" and call.args:
+                for fn in self._resolve_callable_arg(
+                        call.args[0], self._enclosing_fn(call)):
+                    info = self.fninfo.get(fn)
+                    if info is not None:
+                        info.static_params.update(
+                            kw.arg for kw in call.keywords if kw.arg)
+        # (c) factory convention: local functions returned by make_* / _make_*
+        for node, info in self.fninfo.items():
+            if isinstance(node, ast.Lambda) or \
+                    not _FACTORY_RE.match(info.name):
+                continue
+            for ret in ast.walk(node):
+                if not isinstance(ret, ast.Return) or ret.value is None:
+                    continue
+                if self._enclosing_fn(ret) is not info:
+                    continue
+                for fn in self._resolve_callable_arg(ret.value, info):
+                    self.fninfo[fn].traced_seed = True
+
+    def _propagate(self):
+        for info in self.fninfo.values():
+            s, traced, kernel = info, False, False
+            while s is not None:
+                traced = traced or s.traced_seed
+                kernel = kernel or s.kernel_seed
+                s = s.parent
+            info.traced, info.kernel = traced, kernel
+
+    def _traced_context(self, node: ast.AST) -> Optional[_FnInfo]:
+        info = self._enclosing_fn(node)
+        return info if info is not None and info.traced else None
+
+    def _traced_params(self, info: _FnInfo) -> Set[str]:
+        """Params of every traced function enclosing (and including) info,
+        minus declared static params."""
+        out: Set[str] = set()
+        s = info
+        while s is not None:
+            if s.traced:
+                out |= s.params - s.static_params
+            s = s.parent
+        return out
+
+    # ---- findings --------------------------------------------------------
+    def _emit(self, node: ast.AST, rule: str, msg: str):
+        self.findings.append(Finding(
+            self.path, getattr(node, "lineno", 0),
+            getattr(node, "col_offset", 0), rule, msg))
+
+    def run(self) -> List[Finding]:
+        self._rule_t1()
+        for node in ast.walk(self.tree):
+            ctx = self._traced_context(node)
+            if ctx is not None:
+                self._rule_t2(node, ctx)
+                self._rule_t3(node, ctx)
+                self._rule_t4(node, ctx)
+            self._rule_t6(node, ctx)
+        self._rule_t5()
+        self._apply_suppressions()
+        self.findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+        return self.findings
+
+    # T1: device_put result closed over by a traced function
+    def _rule_t1(self):
+        puts: List[Tuple[ast.Assign, str, Optional[_FnInfo]]] = []
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Assign) or \
+                    not isinstance(node.value, ast.Call):
+                continue
+            q = self.imports.resolve(_qual(node.value.func))
+            is_put = q == "jax.device_put"
+            is_asarray_dev = q in ("jax.numpy.asarray", "numpy.asarray") \
+                and any(kw.arg == "device" for kw in node.value.keywords)
+            if not (is_put or is_asarray_dev):
+                continue
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    puts.append((node, t.id, self._enclosing_fn(node)))
+        if not puts:
+            return
+        for node, info in self.fninfo.items():
+            if not info.traced:
+                continue
+            free = _loads(node) - _binds(node)
+            for assign, name, ascope in puts:
+                if name not in free:
+                    continue
+                # the traced fn must be lexically nested inside the
+                # assignment's scope (module-level assigns qualify for any
+                # traced fn) — otherwise it cannot close over the name
+                nested = ascope is None
+                s = info.parent
+                while s is not None and not nested:
+                    nested = s is ascope
+                    s = s.parent
+                if nested:
+                    self._emit(
+                        assign, "T1",
+                        f"`{name}` is placed with device_put but closed "
+                        f"over by traced function `{info.name}`; jit bakes "
+                        f"closure constants in and ignores their placement "
+                        f"— pass it as an argument or shard inside the "
+                        f"trace")
+
+    # T2: host syncs in traced code
+    def _rule_t2(self, node: ast.AST, ctx: _FnInfo):
+        if not isinstance(node, ast.Call):
+            return
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr in (
+                "item", "tolist", "block_until_ready"):
+            self._emit(node, "T2",
+                       f"`.{f.attr}()` forces a host sync inside traced "
+                       f"code (`{ctx.name}`)")
+            return
+        q = self.imports.resolve(_qual(f))
+        if q == "numpy.asarray":
+            self._emit(node, "T2",
+                       f"`np.asarray` pulls a traced value to host inside "
+                       f"`{ctx.name}`; use jnp.asarray")
+            return
+        if q == "jax.device_get":
+            self._emit(node, "T2",
+                       f"`jax.device_get` inside traced code (`{ctx.name}`)")
+            return
+        if isinstance(f, ast.Name) and f.id == "print":
+            self._emit(node, "T2",
+                       f"`print` inside traced code (`{ctx.name}`) runs at "
+                       f"trace time only; use jax.debug.print")
+            return
+        if isinstance(f, ast.Name) and f.id in ("float", "int", "bool") \
+                and node.args and not self._static_expr(node.args[0]) \
+                and self._mentions_traced_value(node.args[0], ctx):
+            self._emit(node, "T2",
+                       f"`{f.id}()` on a possibly-traced value inside "
+                       f"`{ctx.name}` forces a host sync / concretization "
+                       f"error")
+
+    def _mentions_traced_value(self, e: ast.AST, ctx: _FnInfo) -> bool:
+        """True if `e` reads a name bound inside the traced-function chain
+        (params or body locals). Free variables closed over from host
+        scopes are trace-time constants and exempt."""
+        hot: Set[str] = set()
+        s = ctx
+        while s is not None:
+            if s.traced:
+                hot |= s.direct_bound() - s.static_params
+            s = s.parent
+        return any(isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+                   and n.id in hot for n in ast.walk(e))
+
+    def _static_expr(self, e: ast.AST) -> bool:
+        """Expression whose value is trace-time static: literals, len(),
+        shape/ndim/size/dtype attribute chains and indexing into them."""
+        if isinstance(e, ast.Constant):
+            return True
+        if isinstance(e, ast.Attribute) and e.attr in _STATIC_ATTRS:
+            return True
+        if isinstance(e, ast.Subscript):
+            return self._static_expr(e.value)
+        if isinstance(e, ast.Call) and isinstance(e.func, ast.Name) and \
+                e.func.id in ("len", "isinstance"):
+            return True
+        if isinstance(e, ast.BinOp):
+            return self._static_expr(e.left) and self._static_expr(e.right)
+        return False
+
+    # T3: python branching on traced arguments
+    def _rule_t3(self, node: ast.AST, ctx: _FnInfo):
+        if not isinstance(node, (ast.If, ast.While, ast.IfExp)):
+            return
+        hot = self._traced_params(ctx)
+        if not hot:
+            return
+        exempt: Set[int] = set()
+        def _static_const(c: ast.AST) -> bool:
+            if isinstance(c, ast.Constant):
+                return isinstance(c.value, (str, type(None)))
+            if isinstance(c, (ast.Tuple, ast.List, ast.Set)):
+                return all(_static_const(e) for e in c.elts)
+            return False
+
+        for sub in ast.walk(node.test):
+            if isinstance(sub, ast.Compare):
+                static_cmp = all(
+                    isinstance(op, (ast.Is, ast.IsNot)) for op in sub.ops) \
+                    or all(_static_const(c) for c in sub.comparators)
+                if static_cmp:
+                    for n in ast.walk(sub):
+                        exempt.add(id(n))
+            elif isinstance(sub, ast.Attribute) and sub.attr in _STATIC_ATTRS:
+                for n in ast.walk(sub):
+                    exempt.add(id(n))
+            elif isinstance(sub, ast.Call) and \
+                    isinstance(sub.func, ast.Name) and \
+                    sub.func.id in ("len", "isinstance"):
+                for n in ast.walk(sub):
+                    exempt.add(id(n))
+        flagged: Set[str] = set()
+        for n in ast.walk(node.test):
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) and \
+                    n.id in hot and id(n) not in exempt:
+                flagged.add(n.id)
+        if flagged:
+            kind = {ast.If: "if", ast.While: "while",
+                    ast.IfExp: "conditional expression"}[type(node)]
+            names = ", ".join(f"`{x}`" for x in sorted(flagged))
+            self._emit(node, "T3",
+                       f"python {kind} branches on traced argument(s) "
+                       f"{names} of `{ctx.name}`; use jnp.where / "
+                       f"lax.cond, or declare the argument static")
+
+    # T4: numpy constructors in traced code
+    def _rule_t4(self, node: ast.AST, ctx: _FnInfo):
+        if not isinstance(node, ast.Call):
+            return
+        q = self.imports.resolve(_qual(node.func))
+        if not q or not q.startswith("numpy."):
+            return
+        tail = q[len("numpy."):]
+        if tail == "asarray":       # covered by T2
+            return
+        if tail in _NP_CTORS:
+            self._emit(node, "T4",
+                       f"`np.{tail}` inside traced code (`{ctx.name}`) "
+                       f"creates a strongly-typed host constant that "
+                       f"poisons weak-type promotion; use jnp.{tail}")
+
+    # T5: PRNG key reuse
+    def _sampler_key(self, call: ast.Call) -> Optional[str]:
+        q = self.imports.resolve(_qual(call.func))
+        if not q or not q.startswith("jax.random."):
+            return None
+        if q[len("jax.random."):] not in _KEY_CONSUMERS:
+            return None
+        if call.args and isinstance(call.args[0], ast.Name):
+            return call.args[0].id
+        return None
+
+    def _rule_t5(self):
+        in_loop_calls: Set[int] = set()
+        # (a) sampler keyed by a name never rebound inside the loop
+        for loop in ast.walk(self.tree):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            rebound = _binds(loop)
+            loop_fn = self._enclosing_fn(loop)
+            for call in ast.walk(loop):
+                if not isinstance(call, ast.Call):
+                    continue
+                if self._enclosing_fn(call) is not loop_fn:
+                    continue          # nested function body: its own scope
+                key = self._sampler_key(call)
+                if key is None:
+                    continue
+                in_loop_calls.add(id(call))
+                if key not in rebound:
+                    self._emit(
+                        call, "T5",
+                        f"key `{key}` is consumed every loop iteration "
+                        f"without a split/fold_in rebind — identical "
+                        f"randomness each pass")
+        # (b) two samplers consuming the same key binding in straight line
+        scopes: Dict[Optional[ast.AST], List[ast.Call]] = {}
+        for call in ast.walk(self.tree):
+            if isinstance(call, ast.Call) and id(call) not in in_loop_calls \
+                    and self._sampler_key(call):
+                fn = self._enclosing_fn(call)
+                scopes.setdefault(fn.node if fn else None, []).append(call)
+        for scope_node, calls in scopes.items():
+            sub = scope_node if scope_node is not None else self.tree
+            bind_lines: Dict[str, List[int]] = {}
+            for n in ast.walk(sub):
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+                    bind_lines.setdefault(n.id, []).append(n.lineno)
+            seen: Dict[Tuple[str, int], ast.Call] = {}
+            for call in sorted(calls, key=lambda c: (c.lineno, c.col_offset)):
+                key = self._sampler_key(call)
+                last_bind = max([ln for ln in bind_lines.get(key, [])
+                                 if ln <= call.lineno], default=-1)
+                sig = (key, last_bind)
+                if sig in seen:
+                    self._emit(
+                        call, "T5",
+                        f"key `{key}` already consumed by a sampler on "
+                        f"line {seen[sig].lineno} with no rebind in "
+                        f"between — split it")
+                else:
+                    seen[sig] = call
+
+    # T6: pallas hygiene
+    def _rule_t6(self, node: ast.AST, ctx: Optional[_FnInfo]):
+        if isinstance(node, ast.Call) and \
+                self.imports.resolve(_qual(node.func)) == _BLOCKSPEC:
+            im = None
+            if len(node.args) >= 2:
+                im = node.args[1]
+            for kw in node.keywords:
+                if kw.arg == "index_map":
+                    im = kw.value
+            fns = [im] if isinstance(im, ast.Lambda) else \
+                self._resolve_callable_arg(im, self._enclosing_fn(node)) \
+                if im is not None else []
+            for fn in fns:
+                free = _loads(fn) - _binds(fn)
+                captured = set()
+                s = self._enclosing_fn(fn)
+                while s is not None:
+                    captured |= free & s.direct_bound()
+                    s = s.parent
+                if captured:
+                    names = ", ".join(f"`{x}`" for x in sorted(captured))
+                    self._emit(
+                        fn, "T6",
+                        f"BlockSpec index_map captures enclosing Python "
+                        f"state ({names}); index maps must be pure "
+                        f"functions of grid indices (scalar-prefetch refs "
+                        f"must be parameters)")
+        if isinstance(node, ast.Subscript) and \
+                isinstance(node.value, ast.Name) and \
+                _REF_NAME_RE.match(node.value.id):
+            info = self._enclosing_fn(node)
+            if info is None or not info.kernel:
+                self._emit(
+                    node, "T6",
+                    f"`{node.value.id}[...]` looks like a Pallas ref "
+                    f"access outside a kernel body; refs are only "
+                    f"dereferenceable inside pallas_call kernels")
+
+    # ---- suppression -----------------------------------------------------
+    def _apply_suppressions(self):
+        rules_by_line: Dict[int, Optional[Set[str]]] = {}
+        for i, line in enumerate(self.src.splitlines(), start=1):
+            m = _SUPPRESS_RE.search(line)
+            if not m:
+                continue
+            spec = m.group("rules")
+            if spec is None:
+                rules_by_line[i] = None          # disable all
+            else:
+                rules_by_line[i] = {r.strip().upper()
+                                    for r in spec.split(",") if r.strip()}
+        for f in self.findings:
+            if f.line in rules_by_line:
+                allowed = rules_by_line[f.line]
+                if allowed is None or f.rule in allowed:
+                    f.suppressed = True
+
+
+def lint_source(src: str, path: str = "<string>") -> List[Finding]:
+    """All findings for one source blob (suppressed ones flagged, kept)."""
+    try:
+        linter = _ModuleLinter(src, path)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 0, e.offset or 0, "E0",
+                        f"syntax error: {e.msg}")]
+    return linter.run()
+
+
+def lint_file(path: str) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as fh:
+        return lint_source(fh.read(), path)
+
+
+def iter_python_files(paths: Sequence[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+        else:
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if not d.startswith(".")
+                                 and d != "__pycache__")
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+def lint_paths(paths: Sequence[str]) -> Tuple[List[Finding], int]:
+    """Lint every .py file under `paths`; returns (findings, file count)."""
+    findings: List[Finding] = []
+    n = 0
+    for f in iter_python_files(paths):
+        n += 1
+        findings.extend(lint_file(f))
+    return findings, n

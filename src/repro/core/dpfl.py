@@ -492,11 +492,14 @@ def _dpfl_aux_specs(engine: FLEngine, hist_len: int,
 
 
 def _cached_round_step(engine: FLEngine, cfg: DPFLConfig, budget: int,
-                       hist_len: int):
+                       hist_len: int, donate: bool = True):
     """Fetch-or-build the compiled DPFL round_step. Memoized on the engine
     keyed by the static knobs (incl. the client mesh); every run-varying
     array rides in RoundState, so repeated runs (sweeps, benchmarks,
-    serving refreshes) reuse the compiled executable with zero retracing."""
+    serving refreshes) reuse the compiled executable with zero retracing.
+    ``donate`` (default on) aliases the input state's buffers into the
+    outputs instead of double-buffering the (N, P) stacks; the initial
+    state must be donation-safe (`init_round_state` de-aliases it)."""
     cache = getattr(engine, "_dpfl_round_step_cache", None)
     if cache is None:
         cache = engine._dpfl_round_step_cache = {}
@@ -505,7 +508,7 @@ def _cached_round_step(engine: FLEngine, cfg: DPFLConfig, budget: int,
     sparse = _sparse(cfg)
     key = (cfg.tau_train, cfg.refresh_period, cfg.random_graph,
            cfg.graph_impl, cfg.mix_impl, budget, hist_len, part, comp,
-           sparse, engine.mesh, engine.client_axes)
+           sparse, engine.mesh, engine.client_axes, donate)
     if key not in cache:
         reward_fn = engine.make_reward_fn()
         make_agg = (_make_dpfl_aggregate_sparse if sparse
@@ -516,7 +519,8 @@ def _cached_round_step(engine: FLEngine, cfg: DPFLConfig, budget: int,
             hist_len=hist_len,
             aux_specs=_dpfl_aux_specs(engine, hist_len, part, comp,
                                       sparse),
-            participation_key="part" if part else None)
+            participation_key="part" if part else None,
+            donate=donate)
     return cache[key]
 
 

@@ -132,7 +132,8 @@ def _loop(engine, rounds, tau, seed, aggregate, *, local_train=None,
                                      local_train=local_train,
                                      eval_flat=eval_flat,
                                      aux_specs=aux_specs,
-                                     participation_key=part_key)
+                                     participation_key=part_key,
+                                     donate=True)
     else:
         cache = getattr(engine, "_baseline_step_cache", None)
         if cache is None:
@@ -144,7 +145,8 @@ def _loop(engine, rounds, tau, seed, aggregate, *, local_train=None,
                                        local_train=local_train,
                                        eval_flat=eval_flat,
                                        aux_specs=aux_specs,
-                                       participation_key=part_key)
+                                       participation_key=part_key,
+                                       donate=True)
         round_step = cache[k]
     state = init_round_state(flat0, key, aux=aux)
     if engine.mesh is not None:

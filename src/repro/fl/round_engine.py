@@ -25,6 +25,7 @@ all workloads exercise the same compiled path.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Any, Callable, Optional
@@ -33,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
+
+from ..analysis.guards import allow_transfers, no_transfer
 
 
 @functools.partial(
@@ -67,18 +70,51 @@ class RoundState:
     aux: Any
 
 
+def dealias_state(state: RoundState) -> RoundState:
+    """Copy any leaf that shares its buffer with an earlier leaf.
+
+    Initial states naturally alias (``best_flat`` starts as ``flat``, aux
+    side models start from the same stack, aux keys reuse ``state.key``).
+    A donating ``round_step`` (`make_round_step(donate=True)`) would then
+    hand the SAME underlying buffer to XLA twice, which is a runtime error
+    ("Attempt to donate the same buffer twice"), so every leaf must own its
+    storage. Idempotent; a one-time O(state) cost per run."""
+    seen = set()
+
+    def visit(x):
+        if isinstance(x, jax.Array):
+            if id(x) in seen:
+                return jnp.copy(x)
+            seen.add(id(x))
+        return x
+
+    return jax.tree.map(visit, state)
+
+
 def init_round_state(flat, key, *, hist_len: int = 0, aux=None) -> RoundState:
-    """Fresh state from client-stacked flattened params (N, P)."""
+    """Fresh state from client-stacked flattened params (N, P). Every array
+    leaf gets its own storage (a one-time copy), so the state is
+    donation-safe twice over: no two leaves share a buffer (see
+    `dealias_state`) and a donating run never consumes the CALLER's
+    ``flat``/``key``/aux arrays."""
     N = flat.shape[0]
-    return RoundState(
+
+    def own(x):
+        return jnp.copy(x) if isinstance(x, jax.Array) else x
+
+    return jax.tree.map(own, RoundState(
         t=jnp.int32(0),
         key=key,
         flat=flat,
-        best_val=jnp.full((N,), -jnp.inf),
+        # explicit dtype: a weak-typed fill would give the initial state
+        # a different jit signature than the step's (strong) output and
+        # force a second compile at round 1 (recompile_sentinel caught
+        # this — DESIGN.md §13)
+        best_val=jnp.full((N,), -jnp.inf, jnp.float32),
         best_flat=flat,
         val_hist=(jnp.zeros((hist_len, N), jnp.float32)
                   if hist_len else None),
-        aux={} if aux is None else aux)
+        aux={} if aux is None else aux))
 
 
 def _is_pspec(x) -> bool:
@@ -135,7 +171,8 @@ def make_round_step(engine, *, tau: int,
                     eval_flat: Optional[Callable] = None,
                     hist_len: int = 0,
                     aux_specs=None,
-                    participation_key: Optional[str] = None):
+                    participation_key: Optional[str] = None,
+                    donate: bool = False):
     """Compile one federated round into ``round_step(state) -> state``.
 
     tau:         local epochs per round (static)
@@ -158,6 +195,16 @@ def make_round_step(engine, *, tau: int,
                  counting) through aux. An all-ones schedule selects the
                  trained params everywhere — bitwise-identical to the
                  full-participation path on a fixed device layout.
+
+    donate:      donate the input `RoundState` buffers to the call
+                 (``donate_argnums=(0,)``). Every state leaf round-trips
+                 with identical shape/dtype/sharding, so XLA aliases the
+                 buffers in place of double-buffering the (N, P) stacks —
+                 see `repro.analysis.guards.donation_report`. The input
+                 state is consumed: callers must rebind (``state =
+                 round_step(state)``, which `run_rounds` does) and initial
+                 states must not share buffers across leaves
+                 (`init_round_state` de-aliases; DESIGN.md §13).
 
     When ``engine.mesh`` is set (`FLEngine.shard_clients`), the jit is
     built with `round_state_shardings` as ``in_shardings``/``out_shardings``
@@ -203,27 +250,37 @@ def make_round_step(engine, *, tau: int,
             aux=aux)
 
     mesh = getattr(engine, "mesh", None)
+    dn = (0,) if donate else ()
     if mesh is None:
-        return jax.jit(round_step)
+        return jax.jit(round_step, donate_argnums=dn)
     sh = round_state_shardings(mesh, engine.client_axes, hist_len=hist_len,
                                aux_specs=aux_specs)
-    return jax.jit(round_step, in_shardings=(sh,), out_shardings=sh)
+    return jax.jit(round_step, in_shardings=(sh,), out_shardings=sh,
+                   donate_argnums=dn)
 
 
 def run_rounds(round_step, state: RoundState, rounds: int,
                on_flush: Optional[Callable] = None,
-               flush_every: int = 0) -> RoundState:
+               flush_every: int = 0,
+               guard_transfers: bool = True) -> RoundState:
     """Dispatch ``rounds`` compiled steps. The loop itself performs no host
-    transfers; ``on_flush(state, done)`` (if given) is invoked every
-    ``flush_every`` rounds and once at the end — the only places a caller
-    should pull history buffers off device."""
+    transfers — enforced, not just by convention: the dispatch loop runs
+    inside `repro.analysis.guards.no_transfer`, so any hidden host sync or
+    implicit transfer raises instead of silently serializing the rounds
+    (``guard_transfers=False`` opts out). ``on_flush(state, done)`` (if
+    given) is invoked every ``flush_every`` rounds — inside an
+    `allow_transfers` escape, since pulling history buffers off device is
+    its purpose — and once more at the end, outside the guarded region."""
+    guard = no_transfer() if guard_transfers else contextlib.nullcontext()
     last = 0
-    for t in range(rounds):
-        state = round_step(state)
-        if flush_every and on_flush is not None and (t + 1) % flush_every \
-                == 0 and t + 1 < rounds:
-            on_flush(state, t + 1 - last)
-            last = t + 1
+    with guard:
+        for t in range(rounds):
+            state = round_step(state)
+            if flush_every and on_flush is not None and \
+                    (t + 1) % flush_every == 0 and t + 1 < rounds:
+                with allow_transfers():
+                    on_flush(state, t + 1 - last)
+                last = t + 1
     if on_flush is not None and rounds > last:
         on_flush(state, rounds - last)
     return state

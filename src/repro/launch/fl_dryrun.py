@@ -48,7 +48,8 @@ def build_engine_step(n_clients: int, n_train: int, n_val: int, tau: int,
                       compress: str = "none", topk_frac: float = 0.1,
                       quant_bits: int = 8, graph_repr: str = "dense"):
     """Client-sharded FLEngine + the cached DPFL round_step + an abstract
-    RoundState, ready to lower. ``participation < 1`` lowers the
+    RoundState, ready to lower (plus the engine and config, so callers
+    can also RUN the engine loop — ``--run-rounds``). ``participation < 1`` lowers the
     participation-aware step (availability schedule in aux, restricted
     mixing/refresh, realized-comm counters — DESIGN.md §9) instead of the
     schedule-free full-participation program; ``compress`` lowers the
@@ -70,7 +71,7 @@ def build_engine_step(n_clients: int, n_train: int, n_val: int, tau: int,
                      track_history=False, participation=part,
                      compression=comp, graph_repr=graph_repr)
     return dpfl_round_step(engine, cfg), abstract_round_state(engine, cfg), \
-        mesh
+        mesh, engine, cfg
 
 
 def main():
@@ -101,6 +102,11 @@ def main():
                     help="collaboration-graph layout: dense (N, N) masks "
                          "or budget-sparse (N, B) neighbor lists "
                          "(DESIGN.md §12)")
+    ap.add_argument("--run-rounds", type=int, default=0,
+                    help="also RUN the engine for K rounds under a "
+                         "recompile sentinel proving the round_step "
+                         "compiles exactly once across the whole run "
+                         "(DESIGN.md §13)")
     ap.add_argument("--out", default="benchmarks/results/dryrun",
                     help="output dir for the JSON record; --out '' is a "
                          "deprecated alias for --no-out")
@@ -113,7 +119,7 @@ def main():
                       DeprecationWarning, stacklevel=2)
         args.no_out = True
     t0 = time.time()
-    step, state, mesh = build_engine_step(
+    step, state, mesh, engine, cfg = build_engine_step(
         args.clients, args.n_train, args.n_val, args.tau, args.budget,
         args.pods, args.devices, args.participation, args.avail_model,
         args.compress, args.topk_frac, args.quant_bits, args.graph_repr)
@@ -133,6 +139,30 @@ def main():
           f"devices ({args.pods} pods): compute={rl['compute_s']:.4f}s "
           f"memory={rl['memory_s']:.4f}s "
           f"collective={rl['collective_s']:.4f}s dominant={rl['dominant']}")
+    if args.run_rounds:
+        # run the REAL engine loop and prove trace hygiene end to end:
+        # the jitted round_step gains exactly one dispatch-cache entry
+        # (the AOT lower/compile above does not populate it) across the
+        # whole K-round run — every later round is pure re-dispatch
+        import dataclasses
+
+        import numpy as np
+
+        from ..analysis.guards import recompile_sentinel
+        from ..core.dpfl import run_dpfl
+
+        cfg_run = dataclasses.replace(cfg, rounds=args.run_rounds)
+        step_run = dpfl_round_step(engine, cfg_run)
+        t1 = time.time()
+        with recompile_sentinel(step_run, expect_new=1) as h:
+            result = run_dpfl(engine, cfg_run)
+        print(f"run_rounds: {args.run_rounds} rounds in "
+              f"{time.time() - t1:.1f}s, "
+              f"{h.new_compiles()} round_step compile(s) — every "
+              f"subsequent round re-dispatched the same executable; "
+              f"mean test acc {float(np.mean(result.test_acc)):.3f}")
+        rec["run_rounds"] = args.run_rounds
+        rec["round_step_compiles"] = h.new_compiles()
     if not args.no_out:
         os.makedirs(args.out, exist_ok=True)
         fn = os.path.join(

@@ -1,0 +1,17 @@
+"""The PR 2 regression shape, verbatim: a factory placed the mixing
+weights with device_put and let the jitted step CLOSE OVER them. jit
+treats closure constants as baked-in operands and ignores their
+placement, so the carefully chosen sharding silently vanished and every
+round re-transferred the weights. The fix threaded them through the
+RoundState argument instead."""
+import jax
+
+
+def make_round(omega, sharding):
+    omega_dev = jax.device_put(omega, sharding)
+
+    @jax.jit
+    def step(flat):
+        return omega_dev @ flat
+
+    return step

@@ -1,0 +1,12 @@
+"""Suppression fixture: one real T4 finding silenced per line with the
+`# tracelint: disable=Txx` syntax, one left firing."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def pinned(x):
+    # fp32 constant is deliberate here: the fixture wants a strong dtype
+    c = np.float32(2.0)  # tracelint: disable=T4
+    d = np.float32(3.0)
+    return x * c + d

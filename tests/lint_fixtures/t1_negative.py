@@ -1,0 +1,14 @@
+"""T1 negative: the placed array is passed as an ARGUMENT, so jit sees
+its sharding/placement through in_shardings — the correct spelling."""
+import jax
+import jax.numpy as jnp
+
+table = jax.device_put(jnp.arange(8.0))
+
+
+@jax.jit
+def lookup(table, i):
+    return table[i]
+
+
+out = lookup(table, 3)

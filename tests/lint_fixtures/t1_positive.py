@@ -1,0 +1,11 @@
+"""T1 positive: a device_put result closed over by a jitted function.
+jit bakes closure constants into the jaxpr and ignores their placement."""
+import jax
+import jax.numpy as jnp
+
+table = jax.device_put(jnp.arange(8.0))
+
+
+@jax.jit
+def lookup(i):
+    return table[i]

@@ -1,0 +1,12 @@
+"""T2 negative: the host readout happens OUTSIDE the traced function —
+syncing on the result of a jitted call is the normal pull pattern."""
+import jax
+
+
+@jax.jit
+def traced(x):
+    return x * 2
+
+
+def host_readout(x):
+    return traced(x).item()

@@ -1,0 +1,14 @@
+"""T2 positive: host syncs inside traced code — `.item()` and `float()`
+on a traced value both force a transfer / concretization error."""
+import jax
+
+
+@jax.jit
+def bad_item(x):
+    return (x * 2).item()
+
+
+@jax.jit
+def bad_float(x):
+    scale = float(x.sum())
+    return x * scale

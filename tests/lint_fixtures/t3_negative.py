@@ -1,0 +1,19 @@
+"""T3 negative: branching on shape/dtype metadata and on a declared
+static argument — both are trace-time constants."""
+import functools
+
+import jax
+
+
+@jax.jit
+def static_shape_branch(x):
+    if x.ndim == 2:
+        return x.sum(axis=1)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def static_arg_branch(x, mode):
+    if mode == "double":
+        return x * 2
+    return x

@@ -1,0 +1,11 @@
+"""T3 positive: python `if` branching on a traced argument — a
+TracerBoolConversionError at best, a silently specialized program at
+worst. jnp.where / lax.cond is the traced spelling."""
+import jax
+
+
+@jax.jit
+def abs_like(x):
+    if x > 0:
+        return x
+    return -x

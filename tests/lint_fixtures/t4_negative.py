@@ -1,0 +1,12 @@
+"""T4 negative: jnp constructors inside traced code are the correct
+spelling; numpy at module scope (trace-time setup) is fine too."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HOST_TABLE = np.arange(8.0)
+
+
+@jax.jit
+def center(x):
+    return x - jnp.zeros(4)

@@ -1,0 +1,14 @@
+"""T4 positive: numpy constructors inside traced code pin host-computed,
+strongly-typed constants into the jaxpr and poison weak-type promotion."""
+import jax
+import numpy as np
+
+
+@jax.jit
+def center(x):
+    return x - np.zeros(4)
+
+
+@jax.jit
+def pinned_scale(x):
+    return x * np.float32(2.0)

@@ -1,0 +1,18 @@
+"""T5 negative: keys are split/folded before every consumption — one
+fresh subkey per draw."""
+import jax
+
+
+def sample_many(key, n):
+    outs = []
+    for i in range(n):
+        sub = jax.random.fold_in(key, i)
+        outs.append(jax.random.normal(sub, (4,)))
+    return outs
+
+
+def two_draws(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (4,))
+    b = jax.random.uniform(k2, (4,))
+    return a, b

@@ -1,0 +1,17 @@
+"""T5 positive: PRNG key reuse — the same key consumed across loop
+iterations (identical randomness each pass) and two straight-line
+samplers sharing one key binding (correlated draws)."""
+import jax
+
+
+def sample_many(key, n):
+    outs = []
+    for _ in range(n):
+        outs.append(jax.random.normal(key, (4,)))
+    return outs
+
+
+def two_draws(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))
+    return a, b

@@ -1,0 +1,21 @@
+"""T6 negative: index maps that are pure functions of the grid indices
+(a MODULE-level constant is not mutable enclosing-function state), and
+ref accesses inside the kernel actually handed to pallas_call."""
+import jax
+from jax.experimental import pallas as pl
+
+_BLOCK = 4
+
+
+def _double_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def double(x):
+    return pl.pallas_call(
+        _double_kernel,
+        grid=(x.shape[0] // _BLOCK,),
+        in_specs=[pl.BlockSpec((_BLOCK,), lambda i: (i + _BLOCK - _BLOCK,))],
+        out_specs=pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,24 @@
+"""T6 positive: BlockSpec index maps capturing enclosing-function Python
+state (baked in at trace time — silent staleness), and a `*_ref[...]`
+access outside any pallas_call kernel body."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _scale_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def scale(x):
+    offset = x.shape[0] // 8
+    return pl.pallas_call(
+        _scale_kernel,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (i + offset,))],
+        out_specs=pl.BlockSpec((4,), lambda i: (i + offset,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def host_peek(x_ref):
+    return x_ref[0]

@@ -1,0 +1,127 @@
+"""Runtime trace-hygiene guards (DESIGN.md §13): the no_transfer /
+allow_transfers fences, the recompile sentinel, the donation audit, and
+their integration into the round engine's `run_rounds` loop."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.guards import (RecompileError, allow_transfers,
+                                   assert_donatable, donation_report,
+                                   no_transfer, recompile_sentinel)
+from repro.fl.round_engine import init_round_state, run_rounds
+
+
+# ---- transfer fences ----------------------------------------------------
+
+def test_no_transfer_blocks_implicit_host_to_device():
+    """Committing a numpy value to device mid-loop (the PR 2 bug class)
+    must raise inside the fence."""
+    with no_transfer():
+        with pytest.raises(Exception, match="[Dd]isallowed host-to-device"):
+            jax.block_until_ready(jnp.sin(np.ones(3)))
+
+
+def test_no_transfer_blocks_eager_scalar_commit():
+    """Even an innocent-looking eager index/scalar op commits a python
+    constant to device — exactly the per-round host churn the round
+    engine's dispatch loop must not contain."""
+    x = jnp.arange(4.0)
+    jax.block_until_ready(x)
+    with no_transfer():
+        with pytest.raises(Exception, match="[Dd]isallowed host-to-device"):
+            jax.block_until_ready(x[0])
+
+
+def test_allow_transfers_reopens_a_hole():
+    with no_transfer():
+        with allow_transfers():
+            y = jnp.sin(np.ones(3))
+        jax.block_until_ready(y)
+
+
+def test_warm_dispatch_is_legal_inside_no_transfer():
+    """The whole point: re-dispatching a compiled step transfers nothing,
+    so the fence lets the hot loop through untouched."""
+    f = jax.jit(lambda v: v * 2)
+    x = jnp.arange(4.0)
+    jax.block_until_ready(f(x))  # warm outside the fence
+    with no_transfer():
+        y = f(x)
+    np.testing.assert_array_equal(np.asarray(y), [0.0, 2.0, 4.0, 6.0])
+
+
+# ---- recompile sentinel -------------------------------------------------
+
+def test_sentinel_counts_cold_and_warm_compiles():
+    f = jax.jit(lambda v: v + 1)
+    x = jnp.ones(3)
+    with recompile_sentinel(f, expect_new=1):
+        jax.block_until_ready(f(x))
+    with recompile_sentinel(f, expect_new=0) as h:
+        for _ in range(4):
+            jax.block_until_ready(f(x))
+    assert h.new_compiles() == 0
+
+
+def test_sentinel_raises_on_unexpected_recompile():
+    f = jax.jit(lambda v: v + 1)
+    jax.block_until_ready(f(jnp.ones(3)))
+    with pytest.raises(RecompileError, match="expected exactly 0"):
+        with recompile_sentinel(f, expect_new=0):
+            f(jnp.ones(5))  # new shape signature -> fresh compile
+
+
+def test_sentinel_max_new_is_an_upper_bound():
+    f = jax.jit(lambda v: v * 3)
+    with recompile_sentinel(f, max_new=2):
+        f(jnp.ones(3))
+        f(jnp.ones(5))
+    with pytest.raises(RecompileError, match="at most 1"):
+        with recompile_sentinel(f, max_new=1):
+            f(jnp.ones(7))
+            f(jnp.ones(9))
+
+
+def test_sentinel_does_not_mask_body_exceptions():
+    f = jax.jit(lambda v: v + 1)
+    with pytest.raises(ValueError, match="boom"):
+        with recompile_sentinel(f, expect_new=1):
+            raise ValueError("boom")  # no RecompileError on top
+
+
+# ---- donation audit -----------------------------------------------------
+
+def test_donation_report_splits_donatable_and_blocked():
+    def step(s):
+        return {"a": s["a"] + 1, "b": s["b"].astype(jnp.int32)}
+
+    s = {"a": jnp.ones((3, 3), jnp.float32), "b": jnp.zeros((), jnp.float32)}
+    rep = donation_report(step, s)
+    assert [p for p in rep["donatable"]] == ["['a']"]
+    assert [p for p in rep["blocked"]] == ["['b']"]
+    assert rep["donatable_bytes"] == 3 * 3 * 4
+    with pytest.raises(AssertionError, match="not donatable"):
+        assert_donatable(step, s)
+
+
+# ---- run_rounds integration --------------------------------------------
+
+def test_run_rounds_is_guarded_and_flushes_through_the_fence():
+    """The dispatch loop runs fenced; on_flush still pulls mid-loop (via
+    the allow_transfers escape) and once more at the end."""
+    bump = jax.jit(lambda s: dataclasses.replace(s, t=s.t + 1))
+    state = init_round_state(jnp.ones((2, 3)), jax.random.PRNGKey(0))
+    jax.block_until_ready(bump(state).t)  # warm
+
+    pulls = []
+    with recompile_sentinel(bump, expect_new=0):
+        out = run_rounds(bump, init_round_state(jnp.ones((2, 3)),
+                                                jax.random.PRNGKey(0)),
+                         5, on_flush=lambda s, n: pulls.append(
+                             (int(np.asarray(s.t)), n)),
+                         flush_every=2)
+    assert int(out.t) == 5
+    assert pulls == [(2, 2), (4, 2), (5, 1)]

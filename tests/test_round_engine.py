@@ -262,3 +262,61 @@ def test_generic_round_engine_local_only(small_setting):
     # best_val is the running max of the (recorded) evaluations
     acc, _ = eng.eval_val_fn(eng.unflatten(state.best_flat))
     assert bool(jnp.all(acc <= state.best_val + 1e-6))
+
+
+def test_donating_round_step_bitwise_equals_nondonating(small_setting):
+    """`make_round_step(donate=True)` must be a pure memory optimization:
+    the donating step's results are BITWISE identical to the plain step's
+    across a multi-round run, every `RoundState` leaf is donatable (same
+    path/shape/dtype on output), and the donated input is consumed."""
+    from repro.analysis.guards import donation_report
+    from repro.fl.baselines import _global_avg
+
+    eng = small_setting
+
+    def agg(flat, aux, t):
+        return _global_avg(flat, eng.p), aux
+
+    key = jax.random.PRNGKey(11)
+    flat0 = eng.flatten(eng.init_clients(key))
+    step_n = make_round_step(eng, tau=1, aggregate=agg)
+    step_d = make_round_step(eng, tau=1, aggregate=agg, donate=True)
+
+    # static audit: every state leaf round-trips shape/dtype-identical,
+    # so donation aliases the whole state in place of double-buffering
+    rep = donation_report(step_n, init_round_state(flat0, key))
+    assert rep["blocked"] == []
+    assert rep["donatable_bytes"] > 0
+
+    out_n = run_rounds(step_n, init_round_state(flat0, key), 4)
+    out_d = run_rounds(step_d, init_round_state(flat0, key), 4)
+    flat_n = jax.tree_util.tree_flatten_with_path(out_n)[0]
+    flat_d = jax.tree_util.tree_flatten_with_path(out_d)[0]
+    assert [p for p, _ in flat_n] == [p for p, _ in flat_d]
+    for (path, a), (_, b) in zip(flat_n, flat_d):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=jax.tree_util.keystr(path))
+
+    # donation consumes the input buffers — rebinding is mandatory,
+    # which `run_rounds` does (state = round_step(state))
+    s_in = init_round_state(flat0, key)
+    out = step_d(s_in)
+    assert s_in.flat.is_deleted()
+    assert not out.flat.is_deleted()
+
+
+def test_init_round_state_dealiases_aliased_leaves(small_setting):
+    """Initial states naturally alias (best_flat starts as flat; aux side
+    models / graph keys reuse the same arrays). `init_round_state` must
+    de-alias them — donating one underlying buffer twice is a runtime
+    error — and a donating step over such a state must run."""
+    eng = small_setting
+    key = jax.random.PRNGKey(0)
+    flat0 = eng.flatten(eng.init_clients(key))
+    st = init_round_state(flat0, key, aux={"side": flat0, "gkey": key})
+    leaves = jax.tree_util.tree_leaves(st)
+    assert len({id(x) for x in leaves}) == len(leaves)
+    step = make_round_step(eng, tau=1, donate=True)
+    out = step(st)
+    assert int(out.t) == 1

@@ -1,0 +1,119 @@
+"""The trace-hygiene linter (DESIGN.md §13) against its fixture corpus:
+every rule T1–T6 has a firing positive and a silent negative, the PR 2
+device_put-closure regression shape is caught, and per-line suppression
+works — all asserted through the CLI's JSON output, the same interface
+the CI tracelint job consumes. No jax import happens on this path."""
+import contextlib
+import io
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import lint
+from repro.analysis.tracelint import RULES, lint_source
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "lint_fixtures")
+
+
+def lint_json(*names, show_suppressed=False):
+    argv = ["--format=json"] + (["--show-suppressed"] if show_suppressed
+                                else [])
+    argv += [os.path.join(FIXTURES, n) for n in names]
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        code = lint.main(argv)
+    return code, json.loads(buf.getvalue())
+
+
+@pytest.mark.parametrize("rule,expected", [
+    ("T1", 1), ("T2", 2), ("T3", 1), ("T4", 2), ("T5", 2), ("T6", 3),
+])
+def test_each_rule_fires_on_its_positive(rule, expected):
+    code, out = lint_json(f"{rule.lower()}_positive.py")
+    assert code == 1
+    got = [f["rule"] for f in out["findings"]]
+    assert got == [rule] * expected, got
+
+
+@pytest.mark.parametrize("rule", sorted(RULES))
+def test_each_rule_is_silent_on_its_negative(rule):
+    code, out = lint_json(f"{rule.lower()}_negative.py")
+    assert code == 0
+    assert out["findings"] == []
+
+
+def test_pr2_device_put_closure_regression():
+    """The bug class that motivated T1: a factory's device_put result
+    closed over by the jitted step. Must stay caught forever."""
+    code, out = lint_json("pr2_device_put_closure.py")
+    assert code == 1
+    assert [f["rule"] for f in out["findings"]] == ["T1"]
+    assert "omega_dev" in out["findings"][0]["message"]
+
+
+def test_suppression_is_per_line_and_per_rule():
+    # default view: only the unsuppressed T4 remains, exit is non-zero
+    code, out = lint_json("suppression.py")
+    assert code == 1
+    assert out["suppressed"] == 1
+    assert [f["rule"] for f in out["findings"]] == ["T4"]
+    # --show-suppressed reveals the silenced one with its flag set
+    code, out = lint_json("suppression.py", show_suppressed=True)
+    assert code == 1  # suppression never changes the exit status rule
+    flags = sorted(f["suppressed"] for f in out["findings"])
+    assert flags == [False, True]
+
+
+def test_full_corpus_counts():
+    """One JSON run over the whole corpus: 6 positives + regression +
+    suppression fire, 6 negatives stay silent."""
+    code, out = lint_json(".")
+    assert code == 1
+    by_rule = {}
+    for f in out["findings"]:
+        by_rule[f["rule"]] = by_rule.get(f["rule"], 0) + 1
+        assert "_negative" not in f["path"]
+    assert by_rule == {"T1": 2, "T2": 2, "T3": 1, "T4": 3, "T5": 2,
+                       "T6": 3}
+    assert out["suppressed"] == 1
+
+
+def test_syntax_error_becomes_e0_finding():
+    findings = lint_source("def broken(:\n", path="x.py")
+    assert [f.rule for f in findings] == ["E0"]
+
+
+def test_clean_tree_lints_clean():
+    """The repo's own source must stay lint-clean — same invocation as
+    the CI tracelint job."""
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        code = lint.main(["--format=json", "src", "benchmarks", "examples"])
+    out = json.loads(buf.getvalue())
+    assert code == 0, out["findings"]
+    assert out["findings"] == []
+
+
+def test_cli_runs_without_jax_importable():
+    """The lint entrypoint must work in a bare checkout: spawn it with
+    jax imports poisoned and assert it still lints."""
+    env = dict(os.environ, PYTHONPATH="src")
+    poison = (
+        "import sys, types\n"
+        "class _Block:\n"
+        "    def find_module(self, name, path=None):\n"
+        "        if name == 'jax' or name.startswith('jax.'):\n"
+        "            raise ImportError('jax is off-limits here')\n"
+        "sys.meta_path.insert(0, _Block())\n"
+        "from repro.analysis.lint import main\n"
+        f"sys.exit(main(['--format=json', {FIXTURES!r}]))\n"
+    )
+    proc = subprocess.run([sys.executable, "-c", poison], env=env,
+                          cwd=os.path.dirname(FIXTURES) + "/..",
+                          capture_output=True, text=True)
+    assert proc.returncode == 1, proc.stderr
+    out = json.loads(proc.stdout)
+    assert out["files"] >= 14
