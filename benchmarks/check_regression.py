@@ -22,6 +22,19 @@ when BOTH regress beyond the tolerance:
 
 Documented tolerance: a >30% drop (``--tolerance 0.30``) on BOTH
 metrics fails the job. Exit code 1 on regression.
+
+A second mode gates the committed sparse-vs-dense scaling table::
+
+  python -m benchmarks.check_regression \
+      --sparse-fresh /tmp/BENCH_sparse_fresh.json \
+      --sparse-committed benchmarks/results/BENCH_sparse_scaling.json
+
+Cells are keyed (graph, N, repr, budget, rounds); only keys present in
+BOTH records are compared (the smoke sweep times a subset of the
+committed grid). The same two-signal rule applies per intersecting
+sparse/dense pair: the machine-normalized sparse/dense throughput ratio
+AND the absolute sparse rounds/sec must both drop beyond tolerance to
+fail. Both modes may be given in one invocation.
 """
 import argparse
 import json
@@ -52,23 +65,87 @@ def check(fresh: dict, committed: dict, tolerance: float) -> bool:
     return ok
 
 
+def _cell_key(c):
+    return (c["graph"], c["N"], c["repr"], c["budget"], c["rounds"])
+
+
+def check_sparse(fresh: dict, committed: dict, tolerance: float) -> bool:
+    """Gate the sparse-vs-dense scaling cells. True when passing."""
+    fc = {_cell_key(c): c["rounds_per_s"] for c in fresh["cells"]}
+    cc = {_cell_key(c): c["rounds_per_s"] for c in committed["cells"]}
+    inter = sorted(set(fc) & set(cc))
+    if not inter:
+        print("FAIL: no intersecting (graph,N,repr,budget,rounds) cells "
+              "between fresh and committed sparse-scaling records")
+        return False
+    floor = 1.0 - tolerance
+    print("graph,N,repr,budget,rounds,committed,fresh,ratio")
+    for k in inter:
+        print(f"{','.join(map(str, k))},{cc[k]:.3f},{fc[k]:.3f},"
+              f"{fc[k] / cc[k]:.3f}")
+    ok = True
+    # pair up dense/sparse cells sharing (graph, N, budget): the ratio
+    # normalizes machine speed the same way `speedup` does above
+    for graph, n, _, budget, _ in sorted({(k[0], k[1], None, k[3], None)
+                                          for k in inter}):
+        sk = next((k for k in inter if k[:2] == (graph, n)
+                   and k[2] == "sparse" and k[3] == budget), None)
+        dk = next((k for k in inter if k[:2] == (graph, n)
+                   and k[2] == "dense" and k[3] == budget), None)
+        if sk is None or dk is None:
+            continue
+        rel_old, rel_new = cc[sk] / cc[dk], fc[sk] / fc[dk]
+        abs_reg = fc[sk] / cc[sk] < floor
+        rel_reg = rel_new / rel_old < floor
+        if abs_reg and rel_reg:
+            print(f"FAIL: {graph} N={n} sparse regressed >"
+                  f"{tolerance:.0%} on both the sparse/dense ratio "
+                  f"({rel_old:.2f} -> {rel_new:.2f}) and absolute "
+                  f"rounds/sec ({cc[sk]:.2f} -> {fc[sk]:.2f})")
+            ok = False
+        elif abs_reg or rel_reg:
+            print(f"warn: {graph} N={n} sparse regressed on "
+                  f"{'absolute' if abs_reg else 'ratio'} only — "
+                  f"attributing to runner variance")
+    if ok:
+        print("ok: sparse-scaling cells within tolerance")
+    return ok
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fresh", required=True)
-    ap.add_argument("--committed", required=True)
+    ap.add_argument("--fresh")
+    ap.add_argument("--committed")
+    ap.add_argument("--sparse-fresh")
+    ap.add_argument("--sparse-committed")
     ap.add_argument("--tolerance", type=float, default=0.30)
     args = ap.parse_args()
-    fresh = json.load(open(args.fresh))
-    committed = json.load(open(args.committed))
-    for rec, name in ((fresh, "fresh"), (committed, "committed")):
-        if rec.get("workload") != "dpfl_round_loop":
-            sys.exit(f"{name} record is not a dpfl_round_loop benchmark")
-    if (fresh["rounds"], fresh["clients"]) != (committed["rounds"],
-                                               committed["clients"]):
-        sys.exit("fresh and committed runs used different sizes: "
-                 f"{fresh['rounds']}x{fresh['clients']} vs "
-                 f"{committed['rounds']}x{committed['clients']}")
-    if not check(fresh, committed, args.tolerance):
+    if not (args.fresh or args.sparse_fresh):
+        ap.error("need --fresh/--committed and/or "
+                 "--sparse-fresh/--sparse-committed")
+    ok = True
+    if args.fresh or args.committed:
+        if not (args.fresh and args.committed):
+            ap.error("--fresh and --committed go together")
+        fresh = json.load(open(args.fresh))
+        committed = json.load(open(args.committed))
+        for rec, name in ((fresh, "fresh"), (committed, "committed")):
+            if rec.get("workload") != "dpfl_round_loop":
+                sys.exit(f"{name} record is not a dpfl_round_loop "
+                         f"benchmark")
+        if (fresh["rounds"], fresh["clients"]) != (committed["rounds"],
+                                                   committed["clients"]):
+            sys.exit("fresh and committed runs used different sizes: "
+                     f"{fresh['rounds']}x{fresh['clients']} vs "
+                     f"{committed['rounds']}x{committed['clients']}")
+        ok = check(fresh, committed, args.tolerance) and ok
+    if args.sparse_fresh or args.sparse_committed:
+        if not (args.sparse_fresh and args.sparse_committed):
+            ap.error("--sparse-fresh and --sparse-committed go together")
+        ok = check_sparse(json.load(open(args.sparse_fresh)),
+                          json.load(open(args.sparse_committed)),
+                          args.tolerance) and ok
+    if not ok:
         sys.exit(1)
 
 

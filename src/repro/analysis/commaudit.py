@@ -1,0 +1,345 @@
+"""Wire-bytes audit of the DPFL communication claims (DESIGN.md §14).
+
+`DPFLResult.comm_bytes` is hand-maintained arithmetic: realized downloads
+x the codec's static wire size. Nothing in that accounting inspects the
+COMPILED program — this module closes the loop. It lowers the exact
+jitted ``round_step`` that `run_dpfl` dispatches (`core.dpfl
+.dpfl_round_step`), walks the post-SPMD HLO with
+`repro.roofline.hlo.collect_collectives`, classifies every collective
+against the codec's expected payload catalogue, and reconciles physical
+wire bytes against the claimed bytes — exact python-int arithmetic.
+
+Replication-factor derivation (documented, asserted in CI):
+
+  One round claims ``E x bpm`` bytes (E realized downloads, bpm =
+  `compress.bytes_per_model`). On D devices the engine SIMULATES those
+  downloads with one panel exchange per payload part: dense mixing
+  all-gathers each part (per-device operand S·b_part, S = N/D rows), the
+  sparse representation rotates each part D-1 ppermute steps. Counting
+  RECEIVED bytes across all devices:
+
+    all-gather:          S·b_part x (G-1) recv/device x D devices
+    collective-permute:  S·b_part x 1 recv/device x D devices, x(D-1) steps
+
+  Both sum over parts (Σ b_part = bpm) to the same total:
+
+    wire_model = N x bpm x (D-1)            per round, every codec
+               = claimed x R,   R = N(D-1)/E
+
+  On one device (no mesh) there is no collective at all: wire = 0 = R=0
+  — the exchange is a device-local gather. The factor R is the audit's
+  contract: `reconcile` asserts ``wire x E == claimed x N x (D-1)``
+  cross-multiplied in exact ints. E is static (= N·min(budget, N-1))
+  exactly when ``cfg.random_graph`` and full participation — those are
+  the CI cells; greedy/participating configs get the structural audit
+  (payload classification, refresh-branch attribution, no unexplained
+  model-sized collective) without the exact-count assertion.
+
+Classification is exact-match, not threshold: a collective is a model
+payload iff its (kind, per-device operand bytes) hits the codec
+catalogue. A payload-sized collective inside a ``conditional`` branch is
+the GGC refresh probe (attributed, not charged to the per-round wire).
+Collectives whose HLO ``source_file`` metadata points into model or
+training code are XLA's own resharding of the SIMULATION (e.g. the
+client-vmapped conv gathering kernel panels) — real bytes on this mesh,
+zero bytes in the paper's protocol — reported under "training" and never
+a failure. Everything else either stays under one raw model (4P bytes,
+GSPMD control traffic: scalar reductions, graph resharding) or FAILS the
+audit: model-sized traffic from exchange code that no catalogue entry
+explains is exactly the unaccounted download this audit exists to catch.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from ..roofline.hlo import Collective, collect_collectives
+
+__all__ = ["AuditRow", "AuditReport", "payload_catalogue", "wire_bytes",
+           "audit_hlo_text", "audit_config", "static_downloads_per_round",
+           "reconcile"]
+
+
+@dataclass
+class AuditRow:
+    """One collective, classified."""
+    kind: str
+    name: str
+    operand_bytes: int
+    mult: int
+    path: tuple
+    classification: str      # "payload:<part>" | "refresh:<part>" |
+    #                          "training" | "control" | "UNEXPLAINED"
+    wire_bytes: int          # received bytes across all devices, x mult
+
+
+@dataclass
+class AuditReport:
+    n_clients: int
+    n_devices: int
+    n_params: int
+    codec: str                      # "none" | "identity" | "topk" | "int8"
+    graph_repr: str
+    bytes_per_model: int
+    rows: List[AuditRow] = field(default_factory=list)
+    wire_model_bytes: int = 0       # payload wire per round (cond excluded)
+    wire_refresh_bytes: int = 0     # payload-sized wire inside conditionals
+    wire_training_bytes: int = 0    # XLA resharding of the simulation
+    wire_control_bytes: int = 0
+    expected_wire_model_bytes: int = 0   # N x bpm x (D-1)
+    claimed_downloads: Optional[int] = None  # E, when statically derivable
+    exact: bool = False             # E static -> reconciliation asserted
+    failures: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+    @property
+    def replication_factor(self) -> Optional[Tuple[int, int]]:
+        """R as an exact fraction (N(D-1), E), or None when E is
+        round-dependent."""
+        if self.claimed_downloads is None:
+            return None
+        return (self.n_clients * (self.n_devices - 1),
+                self.claimed_downloads)
+
+    def table(self) -> str:
+        """Human-readable claimed-vs-wire table (fl_dryrun --audit-bytes)."""
+        hdr = (f"commaudit: N={self.n_clients} D={self.n_devices} "
+               f"P={self.n_params} codec={self.codec} "
+               f"repr={self.graph_repr} bpm={self.bytes_per_model}")
+        lines = [hdr, f"{'collective':<20}{'operand':>10}{'x':>4}"
+                      f"{'wire':>14}  class @ path"]
+        for r in self.rows:
+            lines.append(f"{r.kind:<20}{r.operand_bytes:>10}{r.mult:>4}"
+                         f"{r.wire_bytes:>14}  {r.classification} @ "
+                         f"{'/'.join(r.path)}")
+        lines.append(f"wire model/round = {self.wire_model_bytes} "
+                     f"(expected N*bpm*(D-1) = "
+                     f"{self.expected_wire_model_bytes}), refresh = "
+                     f"{self.wire_refresh_bytes}, training = "
+                     f"{self.wire_training_bytes}, control = "
+                     f"{self.wire_control_bytes}")
+        if self.claimed_downloads is not None:
+            E = self.claimed_downloads
+            lines.append(
+                f"claimed/round = {E} downloads x {self.bytes_per_model} "
+                f"= {E * self.bytes_per_model} bytes; replication "
+                f"R = N(D-1)/E = {self.n_clients * (self.n_devices - 1)}"
+                f"/{E}")
+        for f in self.failures:
+            lines.append(f"FAIL: {f}")
+        return "\n".join(lines)
+
+
+def _codec_name(comp) -> str:
+    return "none" if comp is None else comp.codec
+
+
+_SRC_RE = re.compile(r'source_file="([^"]+)"')
+# jaxpr provenance that marks a collective as SIMULATION resharding (the
+# per-client forward/backward pass, data pipeline, or the engine's
+# shard-local batching) rather than a federated exchange. Exchange code —
+# kernels/ops.py, core/graph.py, fl/compress.py, core/dpfl.py — is
+# deliberately NOT here: its collectives must match the codec catalogue.
+_TRAINING_SRC = ("/models/", "/data/", "fl/engine.py", "optim")
+
+# jax PRNG internals: generating the SAME randomness a real deployment
+# derives from per-client seeds (int8 dither, participation draws) makes
+# XLA reshard u32 counter blocks. Zero protocol bytes, any size.
+_OPN_RE = re.compile(r'op_name="([^"]*)"')
+_RNG_OPS = ("threefry", "_uniform", "random_bits", "random_seed",
+            "random_wrap", "random_fold_in")
+
+
+def _is_training(c: Collective) -> bool:
+    m = _SRC_RE.search(c.attrs)
+    return bool(m) and any(s in m.group(1) for s in _TRAINING_SRC)
+
+
+def _is_rng(c: Collective) -> bool:
+    m = _OPN_RE.search(c.attrs)
+    return bool(m) and any(s in m.group(1) for s in _RNG_OPS)
+
+
+def payload_catalogue(comp, n_clients: int, n_devices: int,
+                      n_params: int) -> List[Tuple[str, int]]:
+    """[(part name, per-device operand bytes)] one exchange moves. Shard
+    rows S = N/D; parts mirror `compress._payload_parts` dtypes (topk:
+    fp32 vals + int32 idx, int8: s8 q + one fp32 scale per model), so the
+    part sizes sum to S x bytes_per_model exactly for every codec the
+    engine ships (int8 with quant_bits=8 stores one byte per coordinate,
+    matching the charged (P*qbits+7)//8)."""
+    from ..fl import compress as _compress
+    S = n_clients // n_devices
+    comp = _compress.normalize(comp)
+    if comp is None:
+        return [("fp32", S * 4 * n_params)]
+    if comp.codec == "topk":
+        K = _compress.topk_k(comp, n_params)
+        return [("vals", S * 4 * K), ("idx", S * 4 * K)]
+    if comp.codec == "int8":
+        qb = (n_params * comp.quant_bits + 7) // 8
+        return [("q", S * qb), ("scale", S * 4)]
+    raise ValueError(comp.codec)
+
+
+def wire_bytes(c: Collective, n_devices: int) -> int:
+    """Received bytes across all devices for one execution of ``c``,
+    times its loop multiplicity. all-gather: every device receives the
+    other G-1 group members' operands; collective-permute: every device
+    receives one operand-sized panel; all-reduce: G-1 partial sums'
+    worth of traffic per device (ring-equivalent recv model)."""
+    G = c.group_size if c.group_size is not None else n_devices
+    if c.kind == "all-gather":
+        per_dev = c.operand_bytes * (G - 1)
+    elif c.kind == "collective-permute":
+        per_dev = c.operand_bytes
+    elif c.kind in ("all-reduce", "reduce-scatter", "all-to-all"):
+        per_dev = c.operand_bytes * (G - 1)
+    else:
+        per_dev = c.operand_bytes
+    return per_dev * n_devices * c.mult
+
+
+def static_downloads_per_round(cfg, n_clients: int) -> Optional[int]:
+    """Realized downloads E per training round when it is a static int:
+    the Fig.-3 random graph under full participation downloads each
+    client's min(budget, N-1) sampled peers every round (refresh and
+    mix rounds alike — the sampled C_k IS Omega_k). Greedy graphs and
+    participation schedules make E data-dependent -> None."""
+    if not cfg.random_graph or cfg.participation is not None:
+        return None
+    budget = cfg.budget if cfg.budget is not None else n_clients - 1
+    return n_clients * min(budget, n_clients - 1)
+
+
+def audit_hlo_text(text: str, *, n_clients: int, n_devices: int,
+                   n_params: int, compression=None,
+                   graph_repr: str = "dense",
+                   claimed_downloads: Optional[int] = None,
+                   exact: Optional[bool] = None) -> AuditReport:
+    """Classify every collective in a lowered round_step and reconcile.
+
+    ``exact`` (default: claimed_downloads is not None) additionally
+    asserts the payload STRUCTURE: expected part counts (dense: one
+    gather per part; sparse: D-1 rotation steps per part) and the exact
+    wire total N x bpm x (D-1)."""
+    from ..fl import compress as _compress
+    comp = _compress.normalize(compression)
+    bpm = _compress.bytes_per_model(comp, n_params)
+    D = n_devices
+    rep = AuditReport(
+        n_clients=n_clients, n_devices=D, n_params=n_params,
+        codec=_codec_name(comp), graph_repr=graph_repr,
+        bytes_per_model=bpm,
+        expected_wire_model_bytes=n_clients * bpm * (D - 1),
+        claimed_downloads=claimed_downloads,
+        exact=(claimed_downloads is not None) if exact is None else exact)
+
+    parts = payload_catalogue(comp, n_clients, D, n_params)
+    # size -> label. Parts sharing a byte size (topk vals/idx: 4K each)
+    # are indistinguishable on the wire; the accounting below therefore
+    # counts PART-EXCHANGES (one per matched collective, len(parts) for
+    # an XLA-combined variadic gather) rather than naming each part.
+    groups: dict = {}
+    for name, b in parts:
+        groups.setdefault(b, []).append(name)
+    sizes = {b: "|".join(names) for b, names in groups.items()}
+    weight = {b: 1 for b in groups}
+    total = sum(b for _, b in parts)
+    if len(parts) > 1 and total not in sizes:
+        sizes[total] = "+".join(name for name, _ in parts)
+        weight[total] = len(parts)
+    raw_model = 4 * n_params
+
+    part_exchanges = 0
+    for c in collect_collectives(text):
+        in_cond = any(p.startswith("cond") for p in c.path)
+        wb = wire_bytes(c, D)
+        if _is_training(c) or _is_rng(c):
+            cls = "training" if _is_training(c) else "rng"
+            rep.wire_training_bytes += wb
+            rep.rows.append(AuditRow(c.kind, c.name, c.operand_bytes,
+                                     c.mult, c.path, cls, wb))
+            continue
+        if c.kind in ("all-gather", "collective-permute") and \
+                c.operand_bytes in sizes:
+            part = sizes[c.operand_bytes]
+            if in_cond:
+                cls = f"refresh:{part}"
+                rep.wire_refresh_bytes += wb
+            else:
+                cls = f"payload:{part}"
+                rep.wire_model_bytes += wb
+                part_exchanges += weight[c.operand_bytes] * c.mult
+        elif c.operand_bytes * c.mult >= raw_model:
+            cls = "UNEXPLAINED"
+            rep.failures.append(
+                f"unexplained model-sized collective {c.name} "
+                f"({c.kind}, {c.operand_bytes} B x{c.mult} at "
+                f"{'/'.join(c.path)}) — neither a catalogue payload nor "
+                f"control-sized")
+        else:
+            cls = "control"
+            rep.wire_control_bytes += wb
+        rep.rows.append(AuditRow(c.kind, c.name, c.operand_bytes, c.mult,
+                                 c.path, cls, wb))
+
+    if D == 1:
+        if rep.wire_model_bytes or rep.wire_refresh_bytes:
+            rep.failures.append(
+                "single-device lowering moved payload bytes on wire")
+        return rep
+
+    if rep.exact:
+        expect_n = (1 if graph_repr == "dense" else D - 1) * len(parts)
+        if part_exchanges != expect_n:
+            rep.failures.append(
+                f"{part_exchanges} payload part-exchange(s) per round, "
+                f"expected {expect_n} ({graph_repr}, {len(parts)} "
+                f"part(s))")
+        if rep.wire_model_bytes != rep.expected_wire_model_bytes:
+            rep.failures.append(
+                f"wire model bytes {rep.wire_model_bytes} != "
+                f"N*bpm*(D-1) = {rep.expected_wire_model_bytes}")
+    return rep
+
+
+def reconcile(rep: AuditReport, claimed_bytes_per_round: int) -> None:
+    """Assert wire = claimed x N(D-1)/E cross-multiplied in exact ints
+    (no float division). ``claimed_bytes_per_round`` is E x bpm — a
+    `DPFLResult.comm_bytes` entry or the static derivation."""
+    if rep.claimed_downloads is None:
+        raise ValueError("reconcile needs a static E "
+                         "(report.claimed_downloads)")
+    E = rep.claimed_downloads
+    if claimed_bytes_per_round != E * rep.bytes_per_model:
+        raise AssertionError(
+            f"claimed bytes {claimed_bytes_per_round} != E x bpm = "
+            f"{E} x {rep.bytes_per_model}")
+    lhs = rep.wire_model_bytes * E
+    rhs = claimed_bytes_per_round * rep.n_clients * (rep.n_devices - 1)
+    if lhs != rhs:
+        raise AssertionError(
+            f"wire x E = {lhs} != claimed x N(D-1) = {rhs} "
+            f"(wire={rep.wire_model_bytes}, claimed="
+            f"{claimed_bytes_per_round}, N={rep.n_clients}, "
+            f"D={rep.n_devices})")
+
+
+def audit_config(engine, cfg) -> AuditReport:
+    """Lower the exact (engine, cfg) round_step `run_dpfl` dispatches and
+    audit it. The only entry most callers need."""
+    from ..core.dpfl import abstract_round_state, dpfl_round_step
+    step = dpfl_round_step(engine, cfg)
+    text = step.lower(abstract_round_state(engine, cfg)).compile().as_text()
+    mesh = getattr(engine, "mesh", None)
+    D = int(mesh.devices.size) if mesh is not None else 1
+    N = engine.data.n_clients
+    return audit_hlo_text(
+        text, n_clients=N, n_devices=D, n_params=engine.n_params,
+        compression=cfg.compression, graph_repr=cfg.graph_repr,
+        claimed_downloads=static_downloads_per_round(cfg, N))

@@ -1,0 +1,348 @@
+"""Static federated-semantics linter (DESIGN.md §14).
+
+Where `tracelint` guards JAX trace hygiene, this module guards the
+FEDERATED semantics DPFL's claims rest on: client isolation (peers are
+visible only at declared exchange points), communication accounting
+(every exchange is charged), codec integrity (compressed rounds never mix
+raw payloads), participation correctness, mesh-axis naming, and the
+dense/sparse graph-representation boundary. Pure-stdlib AST analysis —
+importing this module never imports jax — reusing tracelint's alias
+resolution, scope machinery and suppression syntax.
+
+  F1  cross-client mixing outside a registered ``@exchange_site``: a
+      client-axis collective (``jax.lax.all_gather`` / ``ppermute`` /
+      ``all_to_all``), a mixing kernel primitive (``graph_mix`` /
+      ``sparse_graph_mix`` / ``compressed_graph_mix``) or a
+      client-mixing einsum (``"ij,j...->i..."``-shaped adjacency
+      contraction) reachable with NO ``@exchange_site`` in its lexical
+      enclosing-function chain. (`repro.analysis.registry`.)
+  F2  an ``@exchange_site`` that neither declares ``charges=`` nor
+      touches a comm counter in its body — bytes silently uncharged.
+  F3  codec bypass: a function that calls ``compress_exchange`` (so a
+      codec is threaded) but mixes a RAW payload — a plain-mixer call
+      (``mix_flat`` / ``mix_flat_sparse`` / ``graph_mix``) not guarded
+      by the ``if <codec> is None`` dispatch.
+  F4  participation bypass: ``mixing_matrix`` / ``sparse_mixing_weights``
+      called WITHOUT ``active=`` in a scope where an ``active`` mask is
+      bound — the Eq.-4 weights would renormalize over absent clients.
+  F5  a collective whose axis-name string literal is not a known mesh
+      axis (default: pod, data, model — `repro.launch.mesh` +
+      model-parallel psum; ``--mesh-axes`` overrides).
+  F6  dense graph materialization on a sparse path: a ``*sparse*``-named
+      function calling a dense-only op (``mixing_matrix``, ``mix_flat``,
+      ``mix_pytree``, ``graph_mix``, ``adjacency_from_neighbors``,
+      ``jax.lax.all_gather`` panel gathers) — the (N, N)/(N, P)
+      materialization DESIGN.md §12 exists to avoid.
+
+Suppression: same per-line syntax as tracelint — append
+``# fedlint: disable=F1`` (or ``# tracelint: disable=F1``; the prefixes
+are interchangeable) plus a comment justifying the construct.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .tracelint import (Finding, _ModuleLinter, _qual, iter_python_files)
+
+F_RULES: Dict[str, str] = {
+    "F1": "cross-client mixing outside a registered @exchange_site",
+    "F2": "exchange site with no charges= declaration or comm-counter "
+          "update",
+    "F3": "raw peer payload mixed while a compression codec is threaded",
+    "F4": "mixing weights built without participation renormalization on "
+          "an active-masked path",
+    "F5": "collective axis-name literal is not a known mesh axis",
+    "F6": "dense graph materialization reachable from a sparse-graph "
+          "code path",
+}
+
+#: mesh axes the repo actually builds (`repro.launch.mesh.make_client_mesh`
+#: client axes + the in-model parallel axis of moe.py / lm.py)
+DEFAULT_MESH_AXES = frozenset({"pod", "data", "model"})
+
+# jax.lax collectives that move data ACROSS the client axis (psum & co.
+# reduce — they appear in model-parallel code, checked only by F5)
+_CLIENT_COLLECTIVES = {
+    "jax.lax.all_gather", "jax.lax.ppermute", "jax.lax.all_to_all",
+}
+# every axis-named collective, for the F5 axis-literal check
+_AXIS_COLLECTIVES = _CLIENT_COLLECTIVES | {
+    "jax.lax.psum", "jax.lax.pmean", "jax.lax.pmax", "jax.lax.pmin",
+    "jax.lax.psum_scatter", "jax.lax.axis_index", "jax.lax.axis_size",
+}
+# mixing kernel primitives, matched by the FINAL name component so the
+# `_kops.graph_mix` / `ops.graph_mix` spellings all resolve
+_MIX_KERNELS = {"graph_mix", "sparse_graph_mix", "compressed_graph_mix"}
+# einsum specs that contract over the leading client axis (whitespace
+# normalized away before matching)
+_CLIENT_EINSUMS = {"ij,j...->i...", "n,np->p", "n,n...->..."}
+
+_PLAIN_MIXERS = {"mix_flat", "mix_flat_sparse", "graph_mix"}
+_WEIGHT_BUILDERS = {"mixing_matrix", "sparse_mixing_weights"}
+_COMM_COUNTER_NAMES = {
+    "comm", "comm_downloads", "comm_bytes", "comm_t", "comm_preprocess",
+    "count_neighbor_downloads", "_realized_downloads",
+}
+_DENSE_ONLY = {"mixing_matrix", "mix_flat", "mix_pytree", "graph_mix",
+               "adjacency_from_neighbors"}
+
+_SPARSE_NAME_RE = re.compile(r"(^|_)sparse(_|$)")
+
+
+def _last(q: Optional[str]) -> Optional[str]:
+    return q.rsplit(".", 1)[-1] if q else None
+
+
+class _FedLinter(_ModuleLinter):
+    """F-rule pass. Subclasses `_ModuleLinter` for its parse/scope/alias/
+    suppression machinery; the traced-function seeding of the parent
+    __init__ is unused here (harmless)."""
+
+    def __init__(self, src: str, path: str,
+                 mesh_axes: Optional[Set[str]] = None):
+        super().__init__(src, path)
+        self.mesh_axes = set(mesh_axes if mesh_axes is not None
+                             else DEFAULT_MESH_AXES)
+
+    # ---- exchange-site recognition -----------------------------------
+    def _site_decorator(self, fn_node: ast.AST) -> Optional[ast.AST]:
+        """The @exchange_site decorator node of a def, bare or called,
+        matched by final name component (no import needed)."""
+        for dec in getattr(fn_node, "decorator_list", []):
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            if _last(_qual(target)) == "exchange_site":
+                return dec
+        return None
+
+    def _in_exchange_site(self, node: ast.AST) -> bool:
+        info = self._enclosing_fn(node)
+        while info is not None:
+            if not isinstance(info.node, ast.Lambda) and \
+                    self._site_decorator(info.node) is not None:
+                return True
+            info = info.parent
+        return False
+
+    # ---- call classification -----------------------------------------
+    def _is_client_primitive(self, call: ast.Call) -> Optional[str]:
+        """A description string when ``call`` is a cross-client mixing
+        primitive (F1's trigger set), else None."""
+        q = self.imports.resolve(_qual(call.func))
+        if q in _CLIENT_COLLECTIVES:
+            return f"collective `{q.rsplit('.', 1)[-1]}`"
+        tail = _last(_qual(call.func))
+        if tail in _MIX_KERNELS:
+            return f"mixing kernel `{tail}`"
+        if tail == "einsum" and call.args and \
+                isinstance(call.args[0], ast.Constant) and \
+                isinstance(call.args[0].value, str):
+            spec = re.sub(r"\s+", "", call.args[0].value)
+            if spec in _CLIENT_EINSUMS:
+                return f'client-mixing einsum "{spec}"'
+        return None
+
+    # ---- rules -------------------------------------------------------
+    def run(self) -> List[Finding]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                self._rule_f1(node)
+                self._rule_f5(node)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._rule_f2(node)
+        self._rule_f3()
+        self._rule_f4()
+        self._rule_f6()
+        self._apply_suppressions()
+        self.findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+        return self.findings
+
+    # F1: cross-client primitive outside a registered exchange site
+    def _rule_f1(self, call: ast.Call):
+        desc = self._is_client_primitive(call)
+        if desc is None or self._in_exchange_site(call):
+            return
+        fn = self._enclosing_fn(call)
+        where = f"`{fn.name}`" if fn is not None else "module level"
+        self._emit(call, "F1",
+                   f"{desc} mixes across the client axis in {where}, "
+                   f"outside any @exchange_site — register the enclosing "
+                   f"function (repro.analysis.registry) or route through "
+                   f"a registered wrapper")
+
+    # F2: exchange site with no charges= and no counter reference
+    def _rule_f2(self, fn: ast.AST):
+        dec = self._site_decorator(fn)
+        if dec is None:
+            return
+        if isinstance(dec, ast.Call) and \
+                any(kw.arg == "charges" for kw in dec.keywords):
+            return
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Name) and \
+                    sub.id in _COMM_COUNTER_NAMES:
+                return
+            if isinstance(sub, ast.Attribute) and \
+                    sub.attr in _COMM_COUNTER_NAMES:
+                return
+            if isinstance(sub, ast.Subscript) and \
+                    isinstance(sub.slice, ast.Constant) and \
+                    sub.slice.value in _COMM_COUNTER_NAMES:
+                return
+        self._emit(fn, "F2",
+                   f"exchange site `{fn.name}` neither declares "
+                   f"`charges=` nor updates a comm counter — the bytes "
+                   f"it moves are silently uncharged")
+
+    # F3: compress_exchange threaded but a raw mixer is reachable
+    def _none_guarded(self, node: ast.AST) -> bool:
+        """True when ``node`` sits in the codec-dispatch branch that
+        handles the NO-codec case: the body of ``if x is None`` or the
+        orelse of ``if x is not None``."""
+        child = node
+        p = self.parent.get(node)
+        while p is not None:
+            if isinstance(p, ast.If):
+                t = p.test
+                if isinstance(t, ast.Compare) and len(t.ops) == 1 and \
+                        isinstance(t.comparators[0], ast.Constant) and \
+                        t.comparators[0].value is None:
+                    in_body = any(child is s or any(child is d for d in
+                                                    ast.walk(s))
+                                  for s in p.body)
+                    if isinstance(t.ops[0], ast.Is) and in_body:
+                        return True
+                    if isinstance(t.ops[0], ast.IsNot) and not in_body:
+                        return True
+            child, p = p, self.parent.get(p)
+        return False
+
+    def _rule_f3(self):
+        by_fn: Dict[Optional[ast.AST], Tuple[List[ast.Call],
+                                             List[ast.Call]]] = {}
+        for call in ast.walk(self.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            tail = _last(_qual(call.func))
+            fn = self._enclosing_fn(call)
+            key = fn.node if fn is not None else None
+            comp, mix = by_fn.setdefault(key, ([], []))
+            if tail == "compress_exchange":
+                comp.append(call)
+            elif tail in _PLAIN_MIXERS:
+                mix.append(call)
+        for key, (comp, mix) in by_fn.items():
+            if not comp:
+                continue
+            for m in mix:
+                if self._none_guarded(m):
+                    continue
+                name = _last(_qual(m.func))
+                self._emit(
+                    m, "F3",
+                    f"`{name}` mixes RAW client params in a scope that "
+                    f"compresses the exchange (compress_exchange on line "
+                    f"{comp[0].lineno}) — mix decoded payloads, or guard "
+                    f"the raw path with the `is None` codec dispatch")
+
+    # F4: weight builder ignores a bound participation mask
+    def _rule_f4(self):
+        for call in ast.walk(self.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            if _last(_qual(call.func)) not in _WEIGHT_BUILDERS:
+                continue
+            if any(kw.arg == "active" for kw in call.keywords):
+                continue
+            fn = self._enclosing_fn(call)
+            bound = False
+            info = fn
+            while info is not None and not bound:
+                bound = "active" in info.direct_bound()
+                info = info.parent
+            if not bound:
+                continue
+            name = _last(_qual(call.func))
+            self._emit(
+                call, "F4",
+                f"`{name}` called without `active=` in a scope that "
+                f"binds an `active` participation mask — the Eq.-4 "
+                f"weights would renormalize over absent clients "
+                f"(DESIGN.md §9)")
+
+    # F5: collective axis-name literals vs the engine mesh axes
+    def _rule_f5(self, call: ast.Call):
+        q = self.imports.resolve(_qual(call.func))
+        if q not in _AXIS_COLLECTIVES:
+            return
+        exprs = list(call.args) + [kw.value for kw in call.keywords]
+        bad = []
+        for e in exprs:
+            elts = e.elts if isinstance(e, (ast.Tuple, ast.List)) else [e]
+            for el in elts:
+                if isinstance(el, ast.Constant) and \
+                        isinstance(el.value, str) and \
+                        el.value not in self.mesh_axes:
+                    bad.append(el.value)
+        if bad:
+            names = ", ".join(f"`{b}`" for b in sorted(set(bad)))
+            known = ", ".join(sorted(self.mesh_axes))
+            self._emit(call, "F5",
+                       f"collective `{q.rsplit('.', 1)[-1]}` names axis "
+                       f"{names}, not one of the engine mesh axes "
+                       f"({known}) — this fails at run time or silently "
+                       f"targets the wrong axis")
+
+    # F6: dense materialization inside sparse-path functions
+    def _rule_f6(self):
+        for node, info in self.fninfo.items():
+            if isinstance(node, ast.Lambda) or \
+                    not _SPARSE_NAME_RE.search(info.name):
+                continue
+            for call in ast.walk(node):
+                if not isinstance(call, ast.Call):
+                    continue
+                inner = self._enclosing_fn(call)
+                if inner is not info:
+                    continue    # nested defs report under their own name
+                q = self.imports.resolve(_qual(call.func))
+                tail = _last(_qual(call.func))
+                dense = tail in _DENSE_ONLY or q == "jax.lax.all_gather"
+                if not dense:
+                    continue
+                self._emit(
+                    call, "F6",
+                    f"sparse-path function `{info.name}` calls dense-"
+                    f"only op `{tail}` — the (N, N)/(N, P) "
+                    f"materialization the sparse representation exists "
+                    f"to avoid (DESIGN.md §12)")
+
+
+def lint_source(src: str, path: str = "<string>",
+                mesh_axes: Optional[Set[str]] = None) -> List[Finding]:
+    """All F-findings for one source blob (suppressed ones flagged)."""
+    try:
+        linter = _FedLinter(src, path, mesh_axes)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 0, e.offset or 0, "E0",
+                        f"syntax error: {e.msg}")]
+    return linter.run()
+
+
+def lint_file(path: str,
+              mesh_axes: Optional[Set[str]] = None) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as fh:
+        return lint_source(fh.read(), path, mesh_axes)
+
+
+def lint_paths(paths: Sequence[str],
+               mesh_axes: Optional[Set[str]] = None
+               ) -> Tuple[List[Finding], int]:
+    """Lint every .py file under ``paths``; (findings, file count)."""
+    findings: List[Finding] = []
+    n = 0
+    for f in iter_python_files(paths):
+        n += 1
+        findings.extend(lint_file(f, mesh_axes))
+    return findings, n

@@ -1,48 +1,98 @@
-"""CLI for the trace-hygiene linter (DESIGN.md §13).
+"""Unified CLI for the repo's static analyzers (DESIGN.md §13, §14).
 
     python -m repro.analysis.lint src benchmarks examples
+    python -m repro.analysis.lint --rules F src        # fedlint only
+    python -m repro.analysis.lint --rules T src        # tracelint only
     python -m repro.analysis.lint src --format=json
     python -m repro.analysis.lint --list-rules
 
-Exit status is non-zero iff any unsuppressed finding remains. Suppress a
-deliberate construct per line with ``# tracelint: disable=Txx`` (or a bare
-``disable``) plus a comment justifying it.
+One entrypoint runs both analyzer families over the same file walk:
+
+  T1-T6  trace hygiene (`repro.analysis.tracelint`, DESIGN.md §13)
+  F1-F6  federated semantics (`repro.analysis.fedlint`, DESIGN.md §14)
+
+Exit status is non-zero iff any unsuppressed finding remains. Both
+families share one per-line suppression syntax — ``# tracelint:
+disable=T2`` and ``# fedlint: disable=F1`` are interchangeable prefixes
+(the rule ids select what is silenced) — and one JSON schema.
 
 Stdlib-only: this entrypoint never imports jax, so it runs in a bare
-checkout (the CI ``tracelint`` job installs nothing).
+checkout (the CI ``tracelint`` / ``fedlint`` jobs install nothing).
 """
 import argparse
 import json
 import sys
 
-from .tracelint import RULES, lint_paths
+from . import fedlint, tracelint
+from .tracelint import iter_python_files
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
-        description="AST trace-hygiene linter for JAX/Pallas code "
-                    "(rules T1-T6; see DESIGN.md §13)")
+        description="AST analyzers for JAX/Pallas federated code: trace "
+                    "hygiene (rules T1-T6, DESIGN.md §13) and federated "
+                    "semantics (rules F1-F6, DESIGN.md §14)")
     ap.add_argument("paths", nargs="*", default=None,
                     help="files or directories to lint (recursively)")
+    ap.add_argument("--rules", default="T,F",
+                    help="comma-separated rule families to run: T "
+                         "(tracelint), F (fedlint); default both")
     ap.add_argument("--format", choices=["text", "json"], default="text",
                     help="output format (json: one object with a "
                          "`findings` list)")
+    ap.add_argument("--mesh-axes", default=None,
+                    help="comma-separated mesh axis names rule F5 "
+                         "accepts (default: pod,data,model)")
     ap.add_argument("--show-suppressed", action="store_true",
                     help="also print findings silenced by "
-                         "`# tracelint: disable=...` lines")
+                         "`# tracelint: disable=...` / "
+                         "`# fedlint: disable=...` lines")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rule catalog and exit")
     args = ap.parse_args(argv)
 
+    families = {f.strip().upper() for f in args.rules.split(",")
+                if f.strip()}
+    unknown = families - {"T", "F"}
+    if unknown:
+        ap.error(f"unknown rule families: {', '.join(sorted(unknown))} "
+                 f"(choose from T, F)")
+
     if args.list_rules:
-        for rid, desc in sorted(RULES.items()):
+        catalog = {}
+        if "T" in families:
+            catalog.update(tracelint.RULES)
+        if "F" in families:
+            catalog.update(fedlint.F_RULES)
+        for rid, desc in sorted(catalog.items()):
             print(f"{rid}  {desc}")
         return 0
     if not args.paths:
         ap.error("no paths given (or use --list-rules)")
 
-    findings, n_files = lint_paths(args.paths)
+    mesh_axes = None
+    if args.mesh_axes is not None:
+        mesh_axes = {a.strip() for a in args.mesh_axes.split(",")
+                     if a.strip()}
+
+    # one walk, each selected analyzer per file; files counted once
+    findings, n_files = [], 0
+    for path in iter_python_files(args.paths):
+        n_files += 1
+        with open(path, "r", encoding="utf-8") as fh:
+            src = fh.read()
+        if "T" in families:
+            findings.extend(tracelint.lint_source(src, path))
+        if "F" in families:
+            fs = fedlint.lint_source(src, path, mesh_axes)
+            if "T" in families:
+                # a syntax error is one E0 finding per analyzer run;
+                # report it once
+                fs = [f for f in fs if f.rule != "E0"]
+            findings.extend(fs)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+
     active = [f for f in findings if not f.suppressed]
     suppressed = [f for f in findings if f.suppressed]
     shown = findings if args.show_suppressed else active

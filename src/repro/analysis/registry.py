@@ -1,0 +1,89 @@
+"""Exchange-site registry: the declared cross-client communication surface.
+
+DPFL's isolation claim (PAPER.md §3) is that clients see peers ONLY
+through the budgeted Eq.-4 exchange and the GGC refresh. `fedlint`
+enforces that claim statically (rule F1): any cross-client mixing
+primitive — a client-axis collective, an adjacency matmul, a
+neighbor-table gather — must occur lexically inside a function declared
+with ``@exchange_site``. This module is that declaration.
+
+The decorator is a RUNTIME PASSTHROUGH (it tags and records, it wraps
+nothing), and this module is stdlib-only so the linter — and anything
+else that wants the registry — can import it without jax.
+
+    @exchange_site(charges="caller")
+    def mix_flat(A, flat_w, ...):
+        ...
+
+``charges`` documents where the moved bytes are accounted (rule F2):
+
+  * ``"caller"``       — a pure mixing/gather helper; the calling
+    aggregate charges the downloads (DPFL: ``aux["comm"]`` counters).
+  * ``"preprocess"``   — charged by the static preprocessing accounting
+    (`repro.core.dpfl._comm_preprocess`).
+  * ``"unaccounted"``  — deliberately outside the comm accounting
+    (Table-1 baselines are compared on accuracy, not bytes).
+
+A bare ``@exchange_site`` (no ``charges``) asserts the function body
+ITSELF updates a comm counter — fedlint's F2 verifies that the body
+references one (``aux["comm"]``, `count_neighbor_downloads`,
+`_realized_downloads`, ...); a bare site touching no counter is a
+silently-uncharged exchange and is flagged.
+
+Statically, fedlint recognizes the decorator BY NAME (any ``Name`` or
+``Attribute`` whose last component is ``exchange_site``, bare or
+called), so lint fixtures and downstream code need no importable
+runtime registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+__all__ = ["ExchangeSite", "EXCHANGE_SITES", "exchange_site",
+           "is_exchange_site"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeSite:
+    """One registered cross-client exchange point."""
+    name: str
+    qualname: str
+    module: str
+    charges: Optional[str] = None   # None = the body updates a counter
+
+
+#: module.qualname -> ExchangeSite, populated at import time by the
+#: decorator. Runtime-introspectable mirror of what fedlint verifies
+#: statically (`repro.fl.round_engine.make_round_step` warns when an
+#: aggregate is neither registered nor built by a registered factory).
+EXCHANGE_SITES: Dict[str, ExchangeSite] = {}
+
+
+def exchange_site(fn=None, *, charges: Optional[str] = None):
+    """Declare ``fn`` (and everything lexically nested in it) a
+    legitimate cross-client exchange point. Pure passthrough: returns
+    ``fn`` itself with an ``__exchange_site__`` tag and a registry
+    entry; call overhead is zero."""
+
+    def register(f):
+        site = ExchangeSite(
+            name=f.__name__,
+            qualname=getattr(f, "__qualname__", f.__name__),
+            module=getattr(f, "__module__", "?"),
+            charges=charges)
+        EXCHANGE_SITES[f"{site.module}.{site.qualname}"] = site
+        try:
+            f.__exchange_site__ = site
+        except (AttributeError, TypeError):
+            pass
+        return f
+
+    if fn is None:
+        return register
+    return register(fn)
+
+
+def is_exchange_site(fn) -> bool:
+    """True iff ``fn`` carries the ``@exchange_site`` tag."""
+    return getattr(fn, "__exchange_site__", None) is not None

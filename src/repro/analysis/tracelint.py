@@ -86,8 +86,12 @@ _NP_CTORS = {
     "uint8", "uint16", "uint32", "uint64", "bool_",
 }
 
+# one suppression syntax for BOTH analyzers (tracelint T-rules, fedlint
+# F-rules): `# tracelint: disable=...` and `# fedlint: disable=...` are
+# interchangeable — the rule ids select what is silenced, not the prefix
+# (compat: `# tracelint: disable=Fxx` keeps working)
 _SUPPRESS_RE = re.compile(
-    r"#\s*tracelint:\s*disable(?:=(?P<rules>[A-Za-z0-9,\s]+))?")
+    r"#\s*(?:tracelint|fedlint):\s*disable(?:=(?P<rules>[A-Za-z0-9,\s]+))?")
 
 _FACTORY_RE = re.compile(r"^_?make_")
 _REF_NAME_RE = re.compile(r"^(\w*_ref|ref)$")

@@ -34,6 +34,7 @@ from jax.sharding import PartitionSpec as PSpec
 
 from ..data.availability import ParticipationConfig, schedule_for_data
 from ..fl import compress as _compress
+from ..analysis.registry import exchange_site
 from ..fl.compress import CompressionConfig
 from ..fl.engine import FLEngine
 from ..fl.round_engine import (RoundState, init_round_state, make_round_step,
@@ -318,6 +319,9 @@ def _make_dpfl_aggregate(engine: FLEngine, cfg: DPFLConfig, reward_fn,
     comp = _compress.normalize(cfg.compression)
     ef = comp is not None and _compress.uses_ef(comp)
 
+    # bare @exchange_site: this aggregate charges its own bytes — the
+    # aux["comm"] counters below (fedlint F2 verifies the body does)
+    @exchange_site
     def aggregate(flat, aux, t):
         adj = aux["adj"]
         omega = aux["omega"]
@@ -328,7 +332,8 @@ def _make_dpfl_aggregate(engine: FLEngine, cfg: DPFLConfig, reward_fn,
         else:
             payload, dec, new_ef = _compress.compress_exchange(
                 comp, flat, aux["ef"] if ef else None,
-                jax.random.fold_in(aux["k_comp"], t))
+                jax.random.fold_in(aux["k_comp"], t),
+                mesh=mesh, client_axes=ca)
             probe_w = dec
             if ef and part:
                 # an absent client transmits nothing: its residual holds
@@ -407,6 +412,9 @@ def _make_dpfl_aggregate_sparse(engine: FLEngine, cfg: DPFLConfig,
     comp = _compress.normalize(cfg.compression)
     ef = comp is not None and _compress.uses_ef(comp)
 
+    # bare @exchange_site: this aggregate charges its own bytes — the
+    # aux["comm"] counters below (fedlint F2 verifies the body does)
+    @exchange_site
     def aggregate(flat, aux, t):
         nbr = aux["nbr"]
         omega = aux["omega_nbr"]
@@ -416,7 +424,8 @@ def _make_dpfl_aggregate_sparse(engine: FLEngine, cfg: DPFLConfig,
         else:
             payload, dec, new_ef = _compress.compress_exchange(
                 comp, flat, aux["ef"] if ef else None,
-                jax.random.fold_in(aux["k_comp"], t))
+                jax.random.fold_in(aux["k_comp"], t),
+                mesh=mesh, client_axes=ca)
             probe_w = dec
             if ef and part:
                 # an absent client transmits nothing: its residual holds

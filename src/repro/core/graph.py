@@ -34,6 +34,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from ..analysis.registry import exchange_site
 from ..kernels import ops as _kops
 from ..sharding.compat import optimization_barrier as _barrier
 
@@ -64,6 +65,7 @@ def mixing_matrix(adj, p, active=None):
     return w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-12)
 
 
+@exchange_site(charges="caller")
 def mix_pytree(A, stacked_params):
     """w_k <- sum_i A[k,i] w_i on a client-stacked pytree (Eq. 4)."""
     return jax.tree.map(
@@ -72,6 +74,7 @@ def mix_pytree(A, stacked_params):
         stacked_params)
 
 
+@exchange_site(charges="caller")
 def mix_flat(A, flat_w, mix_fn=None, *, impl: Optional[str] = None,
              mesh=None, client_axes=None):
     """(N, P) client-stacked flattened params through the Eq.-4 mixing
@@ -86,6 +89,7 @@ def mix_flat(A, flat_w, mix_fn=None, *, impl: Optional[str] = None,
                            client_axes=client_axes)
 
 
+@exchange_site(charges="caller")
 def weighted_sum(mask_p, flat_w, *, impl: Optional[str] = None):
     """sum_n mask_p[n] * flat_w[n] — the set-average numerator used by the
     greedy probes, routed through the same graph_mix kernel as Eq. 4
@@ -210,6 +214,7 @@ def make_ggc(reward_fn: Callable, budget: int, *,
     return ggc
 
 
+@exchange_site(charges="preprocess")
 def make_ggc_naive(reward_fn: Callable, budget: int):
     """Literal Algorithm 2: recompute set averages from scratch each step
     (no running sums). Oracle for the Theorem-1 equivalence tests."""
@@ -319,6 +324,7 @@ def make_ggc_heterogeneous(reward_fn: Callable, max_budget: int, *,
     return ggc
 
 
+@exchange_site(charges="preprocess")
 def _shard_clients_graph(per_client, mesh, client_axes, keys, ks,
                          cand_masks, flat_w, p, extra=()):
     """shard_map a vmapped per-client graph builder over the client mesh
@@ -482,6 +488,7 @@ def sparse_mixing_weights(idx, p, active=None):
     return p / denom, w / denom[:, None]
 
 
+@exchange_site(charges="caller")
 def mix_flat_sparse(self_w, nbr_w, idx, flat_w, peers=None, *,
                     impl: Optional[str] = None, mesh=None,
                     client_axes=None):

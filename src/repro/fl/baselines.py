@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from ..analysis.registry import exchange_site
 from ..core.graph import mix_flat, mixing_matrix
 from ..data.availability import schedule_for_data
 from . import compress as _compress
@@ -31,6 +32,9 @@ from .round_engine import (init_round_state, make_round_step, run_rounds,
                            shard_round_state)
 
 
+# "unaccounted": Table-1 baselines are compared on accuracy, not bytes —
+# their server exchange is deliberately outside the comm accounting
+@exchange_site(charges="unaccounted")
 def _global_avg(flat, p, active=None):
     """FedAvg server average. Under partial participation (``active``
     (N,) bool) only the participating clients' models enter the average
@@ -160,8 +164,10 @@ def _loop(engine, rounds, tau, seed, aggregate, *, local_train=None,
 
 
 def run_local(engine, rounds=20, tau=5, seed=0, **kw):
+    # no aggregate at all: local training exchanges nothing, and an
+    # identity lambda would trip the unregistered-exchange warning
     best_flat, _, _ = _loop(engine, rounds, tau, seed,
-                            lambda f, s, t: (f, s), cache_key=("local",))
+                            None, cache_key=("local",))
     return _finish(engine, best_flat)
 
 
@@ -396,6 +402,7 @@ def run_fedrep(engine, rounds=20, tau=5, seed=0, **kw):
     head_keys = set(getattr(engine.model, "HEAD_KEYS", ()))
     p = engine.p
 
+    @exchange_site(charges="unaccounted")
     def aggregate(flat, state, t):
         stacked = engine.unflatten(flat)
 

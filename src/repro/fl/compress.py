@@ -36,6 +36,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from ..analysis.registry import exchange_site
 from ..kernels import ops as _kops
 from ..kernels.ref import densify_topk
 
@@ -135,17 +136,57 @@ def decode(cfg, payload, n_params: int):
     raise ValueError(cfg.codec)
 
 
-def compress_exchange(cfg, flat, ef, key):
+def _pin_rows(t, mesh, client_axes):
+    """Constrain one encode/decode product to client-row sharding."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    spec = P(tuple(client_axes), *([None] * (t.ndim - 1)))
+    return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+
+def compress_exchange(cfg, flat, ef, key, *, mesh=None, client_axes=None):
     """One round's transmit side: encode the error-compensated models.
 
     flat: (N, P); ef: (N, P) residuals or None (EF off).
     Returns (payload, dec, new_ef): the wire payload, the decoded (N, P)
     models every receiver reconstructs, and the updated residuals
-    (``new_ef`` is None iff ``ef`` is). All ops are row-local, so under a
-    client mesh everything here stays shard-local."""
+    (``new_ef`` is None iff ``ef`` is). Every op here is row-local in
+    the protocol — encode/decode run on the owning client. That is NOT
+    automatic in the lowering: XLA's sharding propagation gives up on
+    top_k's sort and the densify scatter, replicating their operands,
+    which put raw fp32 panels and duplicate payload copies on the wire
+    in a compressed config (caught by `analysis.commaudit`). Threading
+    the client ``mesh`` pins row sharding on everything produced here so
+    the compiled exchange moves compressed parts exactly once."""
     xin = flat + ef if ef is not None else flat
-    payload = encode(cfg, xin, key)
-    dec = decode(cfg, payload, flat.shape[1])
+    if mesh is not None and cfg.codec == "topk":
+        # row-local by construction: the sort partitioner replicates
+        # top_k's operand and the densify scatter replicates the payload
+        # even under output sharding constraints, so run the whole
+        # encode/decode on the owning shard. Per-row ops — bit-identical
+        # to the unsharded path (the engine-vs-reference parity tests
+        # cover the topk codec). int8 stays outside: its dither must draw
+        # from the full-(N, P) key stream to match the reference.
+        from jax.sharding import PartitionSpec as P
+
+        from ..sharding.compat import shard_map
+        ca = tuple(client_axes)
+
+        def enc_dec(x_blk):
+            p = encode(cfg, x_blk, None)
+            return p, decode(cfg, p, x_blk.shape[1])
+
+        payload, dec = shard_map(
+            enc_dec, mesh=mesh, in_specs=P(ca, None),
+            out_specs=({"vals": P(ca, None), "idx": P(ca, None)},
+                       P(ca, None)))(xin)
+    else:
+        payload = encode(cfg, xin, key)
+        dec = decode(cfg, payload, flat.shape[1])
+        if mesh is not None:
+            pin = lambda t: _pin_rows(t, mesh, client_axes)  # noqa: E731
+            payload = {k: pin(v) for k, v in payload.items()}
+            dec = pin(dec)
     new_ef = xin - dec if ef is not None else None
     return payload, dec, new_ef
 
@@ -153,6 +194,7 @@ def compress_exchange(cfg, flat, ef, key):
 # ------------------------------------------------------------------ mixing
 
 
+@exchange_site(charges="caller")
 def _mix_int8_offdiag(A_off, payload, dec, *, impl, mesh, client_axes):
     """Off-diagonal Eq.-4 term for the int8 codec. Single device: reuse
     the already-decoded models through the standard graph_mix. Under a
@@ -181,6 +223,7 @@ def _mix_int8_offdiag(A_off, payload, dec, *, impl, mesh, client_axes):
                          A_off, payload["q"], payload["scale"])
 
 
+@exchange_site(charges="caller")
 def mix_compressed(cfg, A, flat, payload, dec, *, impl=None, mesh=None,
                    client_axes=None):
     """Eq.-4 mixing over compressed peers: off-diagonal contributions use
@@ -218,6 +261,7 @@ def _payload_parts(cfg, payload, n_params: int):
     raise ValueError(cfg.codec)
 
 
+@exchange_site(charges="caller")
 def sparse_mix_compressed(cfg, self_w, nbr_w, nbr_idx, flat, payload, dec,
                           *, impl=None, mesh=None, client_axes=None):
     """Neighbor-list Eq.-4 mixing over compressed peers (DESIGN.md §12):

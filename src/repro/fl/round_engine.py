@@ -28,6 +28,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -165,6 +166,36 @@ def shard_round_state(state: RoundState, mesh, client_axes,
     return jax.device_put(state, sh)
 
 
+def _touches_exchange_site(fn, depth: int = 2) -> bool:
+    """True when ``fn`` is a registered ``@exchange_site`` or (within two
+    levels of globals/closure references) calls one. Runtime mirror of
+    fedlint rule F1 — intentionally forgiving: wrappers around registered
+    mixers pass; only an aggregate that mixes through entirely
+    unregistered code trips the `make_round_step` warning."""
+    from ..analysis.registry import is_exchange_site
+    if is_exchange_site(fn):
+        return True
+    if isinstance(fn, functools.partial):
+        return _touches_exchange_site(fn.func, depth)
+    code = getattr(fn, "__code__", None)
+    if depth == 0 or code is None:
+        return False
+    cands = []
+    glb = getattr(fn, "__globals__", {})
+    for name in code.co_names:
+        v = glb.get(name)
+        if callable(v):
+            cands.append(v)
+    for cell in getattr(fn, "__closure__", None) or ():
+        try:
+            v = cell.cell_contents
+        except ValueError:
+            continue
+        if callable(v):
+            cands.append(v)
+    return any(_touches_exchange_site(c, depth - 1) for c in cands)
+
+
 def make_round_step(engine, *, tau: int,
                     aggregate: Optional[Callable] = None,
                     local_train: Optional[Callable] = None,
@@ -212,6 +243,13 @@ def make_round_step(engine, *, tau: int,
     dispatch boundaries.
     """
     lt = local_train if local_train is not None else engine.train_fn
+    if aggregate is not None and not _touches_exchange_site(aggregate):
+        warnings.warn(
+            f"round_step aggregate {getattr(aggregate, '__name__', '?')!r}"
+            f" is not a registered @exchange_site and references none — "
+            f"its cross-client traffic is invisible to fedlint/commaudit "
+            f"(declare it with repro.analysis.registry.exchange_site)",
+            stacklevel=2)
     agg = aggregate if aggregate is not None else \
         (lambda flat, aux, t: (flat, aux))
 

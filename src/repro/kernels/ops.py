@@ -12,6 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..analysis.registry import exchange_site
 from . import ref
 from .compressed_graph_mix import compressed_graph_mix as _compressed_mix
 from .flash_attention import flash_attention as _flash
@@ -30,6 +31,7 @@ def _impl(impl: Optional[str]) -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
+@exchange_site(charges="caller")
 def graph_mix(A, W, impl: Optional[str] = None, *, mesh=None,
               client_axes=None, **kw):
     """Eq.-4 mixing matmul ``A @ W`` ((M, N) @ (N, P)).
@@ -65,6 +67,7 @@ def graph_mix(A, W, impl: Optional[str] = None, *, mesh=None,
                      out_specs=P(ca, None), check_vma=False)(A, W)
 
 
+@exchange_site(charges="caller")
 def compressed_graph_mix(A, vals, idx, p_dim: int,
                          impl: Optional[str] = None, *, mesh=None,
                          client_axes=None, **kw):
@@ -133,6 +136,7 @@ def _rotation_schedule(mesh, client_axes):
     return sizes, steps
 
 
+@exchange_site(charges="caller")
 def sparse_graph_mix(self_w, nbr_w, nbr_idx, W_self, peer_parts=None,
                      peer_decode=None, impl: Optional[str] = None, *,
                      mesh=None, client_axes=None, **kw):

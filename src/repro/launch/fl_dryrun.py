@@ -46,7 +46,8 @@ def build_engine_step(n_clients: int, n_train: int, n_val: int, tau: int,
                       participation: float = 1.0,
                       avail_model: str = "bernoulli",
                       compress: str = "none", topk_frac: float = 0.1,
-                      quant_bits: int = 8, graph_repr: str = "dense"):
+                      quant_bits: int = 8, graph_repr: str = "dense",
+                      random_graph: bool = False):
     """Client-sharded FLEngine + the cached DPFL round_step + an abstract
     RoundState, ready to lower (plus the engine and config, so callers
     can also RUN the engine loop — ``--run-rounds``). ``participation < 1`` lowers the
@@ -69,7 +70,8 @@ def build_engine_step(n_clients: int, n_train: int, n_val: int, tau: int,
         codec=compress, topk_frac=topk_frac, quant_bits=quant_bits)
     cfg = DPFLConfig(rounds=1, tau_train=tau, budget=budget,
                      track_history=False, participation=part,
-                     compression=comp, graph_repr=graph_repr)
+                     compression=comp, graph_repr=graph_repr,
+                     random_graph=random_graph)
     return dpfl_round_step(engine, cfg), abstract_round_state(engine, cfg), \
         mesh, engine, cfg
 
@@ -102,6 +104,15 @@ def main():
                     help="collaboration-graph layout: dense (N, N) masks "
                          "or budget-sparse (N, B) neighbor lists "
                          "(DESIGN.md §12)")
+    ap.add_argument("--random-graph", action="store_true",
+                    help="Fig.-3 ablation: fixed random C_k of size "
+                         "budget instead of the greedy graph — the only "
+                         "configs whose realized downloads are static, "
+                         "so the one --audit-bytes reconciles exactly")
+    ap.add_argument("--audit-bytes", action="store_true",
+                    help="classify every collective in the lowered "
+                         "round_step and reconcile physical wire bytes "
+                         "against the claimed comm_bytes (DESIGN.md §14)")
     ap.add_argument("--run-rounds", type=int, default=0,
                     help="also RUN the engine for K rounds under a "
                          "recompile sentinel proving the round_step "
@@ -122,7 +133,8 @@ def main():
     step, state, mesh, engine, cfg = build_engine_step(
         args.clients, args.n_train, args.n_val, args.tau, args.budget,
         args.pods, args.devices, args.participation, args.avail_model,
-        args.compress, args.topk_frac, args.quant_bits, args.graph_repr)
+        args.compress, args.topk_frac, args.quant_bits, args.graph_repr,
+        args.random_graph)
     lowered = step.lower(state)
     compiled = lowered.compile()
     print("memory_analysis:", compiled.memory_analysis())
@@ -163,6 +175,45 @@ def main():
               f"mean test acc {float(np.mean(result.test_acc)):.3f}")
         rec["run_rounds"] = args.run_rounds
         rec["round_step_compiles"] = h.new_compiles()
+        run_result = result
+    else:
+        run_result = None
+    if args.audit_bytes:
+        # reconcile what the COMPILED program moves on wire against what
+        # the accounting claims — exact ints, codec-aware (DESIGN.md §14)
+        from ..analysis import commaudit
+
+        rep = commaudit.audit_hlo_text(
+            compiled.as_text(), n_clients=args.clients,
+            n_devices=mesh.devices.size, n_params=engine.n_params,
+            compression=cfg.compression, graph_repr=cfg.graph_repr,
+            claimed_downloads=commaudit.static_downloads_per_round(
+                cfg, args.clients))
+        print(rep.table())
+        claimed_rows = ([rep.claimed_downloads * rep.bytes_per_model]
+                        if rep.claimed_downloads is not None else [])
+        if run_result is not None:
+            claimed_rows = run_result.comm_bytes
+        print(f"{'round':>6}{'claimed B':>14}{'wire B':>14}"
+              f"{'wire/claimed':>14}")
+        for t, cb in enumerate(claimed_rows):
+            ratio = (f"{rep.wire_model_bytes / cb:.3f}" if cb else "-")
+            print(f"{t:>6}{cb:>14}{rep.wire_model_bytes:>14}{ratio:>14}")
+        if rep.claimed_downloads is not None:
+            commaudit.reconcile(
+                rep, rep.claimed_downloads * rep.bytes_per_model)
+            print("audit: wire x E == claimed x N(D-1) — reconciled")
+        rec["audit"] = {
+            "wire_model_bytes": rep.wire_model_bytes,
+            "wire_refresh_bytes": rep.wire_refresh_bytes,
+            "wire_control_bytes": rep.wire_control_bytes,
+            "claimed_downloads": rep.claimed_downloads,
+            "bytes_per_model": rep.bytes_per_model,
+            "ok": rep.ok}
+        if not rep.ok:
+            for f in rep.failures:
+                print("AUDIT FAIL:", f)
+            return 1
     if not args.no_out:
         os.makedirs(args.out, exist_ok=True)
         fn = os.path.join(
@@ -172,4 +223,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..analysis.registry import exchange_site
 from ..optim import apply_updates
 
 
@@ -56,6 +57,7 @@ def make_decode_step(model, cfg):
     return step
 
 
+@exchange_site(charges="caller")
 def make_dpfl_mix(mix_matrix):
     """Cross-client (cross-pod) DPFL aggregation: w_k <- sum_i A[k,i] w_i.
 

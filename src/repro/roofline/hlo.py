@@ -358,6 +358,103 @@ def analyze_hlo_text(text: str) -> Totals:
     return HloModule(text).analyze()
 
 
+# --------------------------------------------- per-collective attribution
+
+
+@dataclass
+class Collective:
+    """One collective instruction, attributed to its call path.
+
+    kind:          which of COLLECTIVE_OPS
+    name:          HLO instruction name
+    operand_bytes: per-device operand bytes (post-SPMD shapes), one
+                   execution
+    mult:          loop multiplicity (product of enclosing while
+                   known_trip_counts); total loop-traffic contribution is
+                   operand_bytes * mult
+    path:          call path from entry, e.g. ('entry', 'while',
+                   'cond[1]') — conditionals record the branch INDEX so
+                   callers can attribute a collective to, say, the GGC
+                   refresh branch rather than summing both branches (which
+                   `HloModule.analyze` deliberately does as an upper
+                   bound)
+    group_size:    devices per replica group, when the replica_groups
+                   attribute is parseable (else None)
+    attrs:         raw attribute text, for bespoke classification
+    """
+    kind: str
+    name: str
+    operand_bytes: int
+    mult: int
+    path: tuple
+    group_size: Optional[int]
+    attrs: str
+
+
+def replica_group_size(attrs: str) -> Optional[int]:
+    """Devices per replica group from a replica_groups attribute: the
+    iota form [G,S]<=[dims]T(perm) has S devices per group; explicit
+    {{...},{...}} lists are measured (None when ragged or absent)."""
+    m = _RG_IOTA.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _RG_LIST.search(attrs)
+    if m:
+        sizes = {len([x for x in grp.split(",") if x.strip() != ""])
+                 for grp in m.group(1).split("},{")}
+        if len(sizes) == 1:
+            return sizes.pop()
+    return None
+
+
+def collect_collectives(text_or_module) -> List[Collective]:
+    """Every collective reachable from entry, loop-multiplied and
+    path-attributed. Unlike `HloModule.analyze` — a traffic upper bound
+    that sums BOTH branches of a conditional — this keeps each branch's
+    collectives distinct via the path tuple, which the commaudit needs to
+    separate the every-round Eq.-4 exchange from the conditional GGC
+    refresh. ``-start``/``-done`` async pairs count once (at -start)."""
+    m = text_or_module if isinstance(text_or_module, HloModule) \
+        else HloModule(text_or_module)
+    out: List[Collective] = []
+    if m.entry is None:
+        return out
+
+    def walk(comp: str, mult: int, path: tuple):
+        symtab = {i.name: i.shape for i in m.computations.get(comp, [])}
+        for i in m.computations.get(comp, []):
+            if i.opcode == "while":
+                t = i.trip_count or 1
+                for c in i.called:
+                    if c in m.computations:
+                        walk(c, mult * t, path + ("while",))
+                continue
+            if i.opcode == "call":
+                for c in i.called:
+                    if c in m.computations:
+                        walk(c, mult, path + ("call",))
+                continue
+            if i.opcode == "conditional":
+                for bi, c in enumerate(i.called):
+                    if c in m.computations:
+                        walk(c, mult, path + (f"cond[{bi}]",))
+                continue
+            if i.opcode.endswith("-done"):
+                continue
+            if i.opcode.startswith(COLLECTIVE_OPS):
+                kind = next(k for k in COLLECTIVE_OPS
+                            if i.opcode.startswith(k))
+                ob = sum(shape_bytes(symtab.get(o, ""))
+                         for o in i.operands)
+                out.append(Collective(
+                    kind=kind, name=i.name, operand_bytes=ob, mult=mult,
+                    path=path, group_size=replica_group_size(i.attrs),
+                    attrs=i.attrs))
+
+    walk(m.entry, 1, ("entry",))
+    return out
+
+
 # ------------------------------------------------- cross-pod classification
 
 _RG_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"

@@ -1,0 +1,27 @@
+"""F1 negative: the same mixing primitives are fine inside a declared
+@exchange_site — directly decorated or lexically nested in one."""
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.registry import exchange_site
+from repro.kernels.ops import graph_mix
+
+
+@exchange_site(charges="caller")
+def registered_mix(A, W):
+    return graph_mix(A, W)
+
+
+@exchange_site(charges="caller")
+def registered_sharded_mix(A, stacked):
+    def row_block(a_blk, w_blk):
+        w_full = jax.lax.all_gather(w_blk, ("pod", "data"), axis=0,
+                                    tiled=True)
+        return jnp.einsum("ij,j...->i...", a_blk, w_full)
+
+    return row_block(A, stacked)
+
+
+def shape_only_einsum(x, y):
+    # not a client-axis contraction: spec is not in the mixing set
+    return jnp.einsum("bij,bjk->bik", x, y)

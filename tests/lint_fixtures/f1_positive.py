@@ -1,0 +1,19 @@
+"""F1 positive: cross-client mixing primitives with no @exchange_site
+anywhere in the enclosing chain — a client-axis collective, an adjacency
+einsum, and a raw mixing-kernel call (3 findings)."""
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import graph_mix
+
+
+def rogue_panel_gather(w_blk):
+    return jax.lax.all_gather(w_blk, ("pod", "data"), axis=0, tiled=True)
+
+
+def rogue_adjacency_mix(A, stacked):
+    return jnp.einsum("ij,j...->i...", A, stacked)
+
+
+def rogue_kernel_mix(A, W):
+    return graph_mix(A, W)

@@ -1,0 +1,16 @@
+"""F2 negative: exchange sites that either declare where their bytes are
+charged (charges=) or visibly update a comm counter in the body."""
+from repro.analysis.registry import exchange_site
+
+
+@exchange_site(charges="caller")
+def helper_mix(A, W):
+    return A @ W
+
+
+@exchange_site
+def self_charging_exchange(flat, aux, t, downloads):
+    mixed = flat.mean(axis=0, keepdims=True) + 0 * flat
+    aux = dict(aux)
+    aux["comm"] = aux["comm"] + downloads
+    return mixed, aux

@@ -1,0 +1,9 @@
+"""F2 positive: a bare @exchange_site (which asserts the body charges its
+own bytes) that never touches a comm counter — silently uncharged."""
+from repro.analysis.registry import exchange_site
+
+
+@exchange_site
+def uncharged_exchange(flat, aux, t):
+    mixed = flat.mean(axis=0, keepdims=True) + 0 * flat
+    return mixed, aux

@@ -1,0 +1,19 @@
+"""F3 negative: compressed scopes that mix raw params ONLY on the
+no-codec branch of the `is None` dispatch (both orientations)."""
+from repro.core.graph import mix_flat
+from repro.fl.compress import compress_exchange, mix_compressed
+
+
+def aggregate(comp, cfg, A, flat, key):
+    if comp is None:
+        return mix_flat(A, flat)
+    payload, dec, _ = compress_exchange(cfg, flat, key, None)
+    return mix_compressed(cfg, A, flat, payload, dec)
+
+
+def aggregate_flipped(comp, cfg, A, flat, key):
+    if comp is not None:
+        payload, dec, _ = compress_exchange(cfg, flat, key, None)
+        return mix_compressed(cfg, A, flat, payload, dec)
+    else:
+        return mix_flat(A, flat)

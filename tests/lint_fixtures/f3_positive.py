@@ -1,0 +1,11 @@
+"""F3 positive: the codec-bypass shape — a scope that compresses the
+exchange (so a codec is threaded) but still mixes the RAW client params
+through a plain mixer, unguarded by the `is None` codec dispatch."""
+from repro.core.graph import mix_flat
+from repro.fl.compress import compress_exchange
+
+
+def aggregate(cfg, A, flat, key):
+    payload, dec, _ = compress_exchange(cfg, flat, key, None)
+    # BUG: peers must see `dec` (the decoded payload), not raw `flat`
+    return mix_flat(A, flat)

@@ -1,0 +1,16 @@
+"""F4 negative: the mask is threaded into the weight builders, or no
+mask exists in scope (full participation — nothing to thread)."""
+from repro.core.graph import mixing_matrix, sparse_mixing_weights
+
+
+def aggregate(adj, p, aux, t):
+    active = aux["part"][t]
+    return mixing_matrix(adj, p, active=active)
+
+
+def aggregate_sparse(omega, p, active):
+    return sparse_mixing_weights(omega, p, active=active)
+
+
+def full_participation(adj, p):
+    return mixing_matrix(adj, p)

@@ -1,0 +1,13 @@
+"""F4 positive: an availability mask is bound in scope but the Eq.-4
+weight builders ignore it — weights renormalize over absent clients."""
+from repro.core.graph import mixing_matrix, sparse_mixing_weights
+
+
+def aggregate(adj, p, aux, t):
+    active = aux["part"][t]
+    A = mixing_matrix(adj, p)
+    return A * active[:, None]
+
+
+def aggregate_sparse(omega, p, active):
+    return sparse_mixing_weights(omega, p)

@@ -1,0 +1,16 @@
+"""F5 negative: collectives naming the axes the engine actually builds
+(client mesh 'pod'/'data', model-parallel 'model')."""
+import jax
+
+
+def shard_sum(x):
+    return jax.lax.psum(x, "model")
+
+
+def client_mean(x):
+    return jax.lax.pmean(x, ("pod", "data"))
+
+
+def dynamic_axis(x, axis_name):
+    # non-literal axis names are out of static reach — not flagged
+    return jax.lax.psum(x, axis_name)

@@ -1,0 +1,12 @@
+"""F5 positive: collective axis-name literals that are not engine mesh
+axes (pod/data/model) — a run-time NameError on the real mesh, or a
+silently wrong axis (2 findings)."""
+import jax
+
+
+def shard_sum(x):
+    return jax.lax.psum(x, "clients")
+
+
+def my_rank():
+    return jax.lax.axis_index("client")

@@ -1,0 +1,20 @@
+"""F6 negative: sparse-path functions that stay in neighbor-list form,
+and a dense-path function free to use dense ops."""
+from repro.analysis.registry import exchange_site
+from repro.core.graph import (count_neighbor_downloads, mixing_matrix,
+                              sparse_mixing_weights)
+from repro.kernels.ops import sparse_graph_mix
+
+
+@exchange_site(charges="caller")
+def mix_sparse_rows(self_w, nbr_w, idx, flat_w):
+    downloads = count_neighbor_downloads(idx)
+    return sparse_graph_mix(self_w, nbr_w, idx, flat_w), downloads
+
+
+def sparse_weights_only(omega, p):
+    return sparse_mixing_weights(omega, p)
+
+
+def dense_path(adj, p):
+    return mixing_matrix(adj, p)

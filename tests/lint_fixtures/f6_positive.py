@@ -1,0 +1,9 @@
+"""F6 positive: a sparse-path function materializing the dense graph —
+the (N, N)/(N, P) objects the sparse representation exists to avoid
+(2 findings)."""
+from repro.core.graph import adjacency_from_neighbors, mixing_matrix
+
+
+def mix_sparse_rows(nbr_idx, p, n):
+    adj = adjacency_from_neighbors(nbr_idx, n)
+    return mixing_matrix(adj, p)

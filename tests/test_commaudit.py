@@ -1,0 +1,181 @@
+"""`analysis.commaudit` on synthetic lowered modules: payload
+classification against the codec catalogue, refresh/training/rng
+attribution, the N·bpm·(D-1) wire identity, and the exact cross-
+multiplied reconciliation — plus the real-engine subprocess smoke that
+CI runs on forced host devices (DESIGN.md §14)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import commaudit
+from repro.fl.compress import CompressionConfig, bytes_per_model, topk_k
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+N, D, P = 16, 8, 1000          # S = N/D = 2 rows per device
+BPM = 4 * P                    # lossless fp32
+E = N * 4                      # random graph, budget 4
+
+
+def module(body_lines, branches=()):
+    """A parseable HLO module whose entry holds ``body_lines`` (each a
+    full instruction line) after a f32[2,1000] parameter %w."""
+    txt = "HloModule synth, entry_computation_layout={(f32[2,1000])->f32[2,1000]}\n\n"
+    for bname, blines in branches:
+        txt += f"%{bname} (bp: f32[2,1000]) -> f32[2,1000] {{\n"
+        txt += "  %bp = f32[2,1000] parameter(0)\n"
+        for ln in blines:
+            txt += f"  {ln}\n"
+        txt += "  ROOT %br = f32[2,1000] copy(f32[2,1000] %bp)\n}\n\n"
+    txt += "ENTRY %main (w: f32[2,1000]) -> f32[2,1000] {\n"
+    txt += "  %w = f32[2,1000] parameter(0)\n"
+    for ln in body_lines:
+        txt += f"  {ln}\n"
+    txt += "  ROOT %r = f32[2,1000] copy(f32[2,1000] %w)\n}\n"
+    return txt
+
+
+PAYLOAD_AG = ('%panel = f32[16,1000] all-gather(f32[2,1000] %w), '
+              'replica_groups=[1,8]<=[8], dimensions={0}')
+TRAIN_AG = ('%conv = f32[16,1000] all-gather(f32[2,1000] %w), '
+            'replica_groups=[1,8]<=[8], dimensions={0}, '
+            'metadata={op_name="jit(round_step)/conv_general_dilated" '
+            'source_file="/x/src/repro/models/classifier.py" source_line=16}')
+RNG_AR = ('%bits = u32[992096] all-reduce(u32[992096] %w), '
+          'replica_groups=[1,8]<=[8], to_apply=%add, '
+          'metadata={op_name="jit(round_step)/jit(_uniform)/concatenate" '
+          'source_file="/x/src/repro/fl/compress.py" source_line=1}')
+CONTROL = ('%s16 = f32[16] convert(f32[2,1000] %w)',
+           '%tiny = f32[16] all-reduce(f32[16] %s16), '
+           'replica_groups=[1,8]<=[8], to_apply=%add')
+
+
+def audit(text, *, compression=None, graph_repr="dense", devices=D,
+          claimed=E):
+    return commaudit.audit_hlo_text(
+        text, n_clients=N, n_devices=devices, n_params=P,
+        compression=compression, graph_repr=graph_repr,
+        claimed_downloads=claimed)
+
+
+def test_dense_payload_reconciles_exactly():
+    rep = audit(module([PAYLOAD_AG, *CONTROL]))
+    assert rep.ok, rep.failures
+    # all-gather: S*4P operand x (G-1)=7 recv x 8 devices = N*bpm*(D-1)
+    assert rep.wire_model_bytes == N * BPM * (D - 1) == 448000
+    assert rep.replication_factor == (N * (D - 1), E)
+    commaudit.reconcile(rep, E * BPM)        # must not raise
+
+
+def test_sparse_rotation_reconciles_exactly():
+    steps = [f'%rot{i} = f32[2,1000] collective-permute(f32[2,1000] %w), '
+             f'source_target_pairs={{{{0,1}},{{1,0}}}}' for i in range(D - 1)]
+    rep = audit(module(steps), graph_repr="sparse")
+    assert rep.ok, rep.failures
+    # permute: S*4P operand x 8 devices x (D-1) steps — same total
+    assert rep.wire_model_bytes == N * BPM * (D - 1)
+    commaudit.reconcile(rep, E * BPM)
+
+
+def test_training_and_rng_metadata_never_fail():
+    rep = audit(module([PAYLOAD_AG, TRAIN_AG, RNG_AR]))
+    assert rep.ok, rep.failures
+    cls = sorted(r.classification for r in rep.rows)
+    assert cls == ["payload:fp32", "rng", "training"]
+    assert rep.wire_model_bytes == N * BPM * (D - 1)
+    assert rep.wire_training_bytes > 0
+
+
+def test_unexplained_model_sized_collective_fails():
+    # same bytes as TRAIN_AG but WITHOUT training/rng provenance
+    rep = audit(module([PAYLOAD_AG,
+                        PAYLOAD_AG.replace("%panel", "%rogue")]))
+    assert not rep.ok
+    # second copy matches the catalogue -> counted as a duplicate
+    # exchange, caught by the part-exchange count and the wire total
+    assert any("part-exchange" in f for f in rep.failures)
+    assert any("wire model bytes" in f for f in rep.failures)
+
+
+def test_refresh_branch_attributed_not_charged():
+    branch = ('%probe = f32[16,1000] all-gather(f32[2,1000] %bp), '
+              'replica_groups=[1,8]<=[8], dimensions={0}')
+    cond = ('%c = f32[2,1000] conditional(pred[] %w, f32[2,1000] %w, '
+            'f32[2,1000] %w), branch_computations={%mixb, %refb}')
+    rep = audit(module([PAYLOAD_AG, cond],
+                       branches=[("mixb", []), ("refb", [branch])]))
+    assert rep.ok, rep.failures
+    assert rep.wire_model_bytes == N * BPM * (D - 1)
+    assert rep.wire_refresh_bytes == N * BPM * (D - 1)
+    assert any(r.classification == "refresh:fp32" for r in rep.rows)
+
+
+def test_topk_ambiguous_parts_count_part_exchanges():
+    comp = CompressionConfig(codec="topk", topk_frac=0.1)
+    K = topk_k(comp, P)
+    part = 2 * 4 * K            # S rows x 4 bytes x K — vals AND idx
+    lines = [f'%vals = f32[16,{K}] all-gather(f32[2,{K}] %{op}), '
+             f'replica_groups=[1,8]<=[8], dimensions={{0}}'
+             .replace("%vals", f"%g{i}")
+             for i, op in enumerate(["v", "i"])]
+    pre = [f'%v = f32[2,{K}] convert(f32[2,1000] %w)',
+           f'%i = f32[2,{K}] convert(f32[2,1000] %w)']
+    rep = audit(module(pre + lines), compression=comp,
+                claimed=E)
+    assert rep.ok, rep.failures
+    bpm = bytes_per_model(comp, P)
+    assert rep.wire_model_bytes == N * bpm * (D - 1)
+    assert all(r.classification == "payload:vals|idx" for r in rep.rows)
+    commaudit.reconcile(rep, E * bpm)
+    # sanity: vals and idx per-part sizes coincide at S x 4K each
+    assert part == (N // D) * 4 * K
+
+
+def test_single_device_means_zero_wire():
+    rep = audit(module([]), devices=1)
+    assert rep.ok and rep.wire_model_bytes == 0
+    commaudit.reconcile(rep, E * BPM)   # wire x E == claimed x N*0 == 0
+
+
+def test_reconcile_rejects_wrong_claim():
+    rep = audit(module([PAYLOAD_AG]))
+    with pytest.raises(AssertionError):
+        commaudit.reconcile(rep, E * BPM + 1)
+
+
+def test_static_downloads_random_graph_only():
+    from repro.core.dpfl import DPFLConfig
+    cfg = DPFLConfig(rounds=1, budget=4, random_graph=True)
+    assert commaudit.static_downloads_per_round(cfg, N) == N * 4
+    assert commaudit.static_downloads_per_round(
+        DPFLConfig(rounds=1, budget=4), N) is None
+
+
+def test_payload_catalogue_sums_to_shard_bpm():
+    for comp in [None, CompressionConfig(codec="topk", topk_frac=0.1),
+                 CompressionConfig(codec="int8", quant_bits=8)]:
+        parts = commaudit.payload_catalogue(comp, N, D, P)
+        assert sum(b for _, b in parts) == (N // D) * bytes_per_model(
+            comp, P)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("extra", [
+    [],                                            # dense lossless
+    ["--graph-repr", "sparse"],                    # sparse lossless
+    ["--compress", "topk"],                        # dense topk
+])
+def test_fl_dryrun_audit_bytes_subprocess(extra):
+    """The CI invocation: fl_dryrun --audit-bytes exits 0 and prints the
+    reconciliation line for a random-graph cell on 8 host devices."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.fl_dryrun", "--devices", "8",
+         "--clients", "16", "--n-train", "8", "--n-val", "4", "--tau", "1",
+         "--budget", "4", "--pods", "1", "--random-graph", "--audit-bytes",
+         "--no-out"] + extra,
+        capture_output=True, text=True, cwd=ROOT, env=env, timeout=1200)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "reconciled" in r.stdout, r.stdout

@@ -1,0 +1,132 @@
+"""The federated-semantics linter (DESIGN.md §14) against its fixture
+corpus: every rule F1–F6 has a firing positive (including the
+codec-bypass and uncharged-exchange shapes) and a silent negative, the
+two rule families stay independent, and the unified CLI exposes both
+through one JSON schema. No jax import happens on this path."""
+import contextlib
+import io
+import json
+import os
+
+import pytest
+
+from repro.analysis import lint
+from repro.analysis.fedlint import F_RULES, lint_source
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "lint_fixtures")
+
+
+def lint_json(*names, rules="F", show_suppressed=False):
+    argv = ["--format=json", "--rules", rules]
+    if show_suppressed:
+        argv.append("--show-suppressed")
+    argv += [os.path.join(FIXTURES, n) for n in names]
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        code = lint.main(argv)
+    return code, json.loads(buf.getvalue())
+
+
+@pytest.mark.parametrize("rule,expected", [
+    ("F1", 3), ("F2", 1), ("F3", 1), ("F4", 2), ("F5", 2), ("F6", 2),
+])
+def test_each_rule_fires_on_its_positive(rule, expected):
+    code, out = lint_json(f"{rule.lower()}_positive.py")
+    assert code == 1
+    got = [f["rule"] for f in out["findings"]]
+    assert got == [rule] * expected, got
+
+
+@pytest.mark.parametrize("rule", sorted(F_RULES))
+def test_each_rule_is_silent_on_its_negative(rule):
+    code, out = lint_json(f"{rule.lower()}_negative.py")
+    assert code == 0
+    assert out["findings"] == []
+
+
+def test_rule_families_are_independent():
+    """T rules stay silent on the F corpus and vice versa — the families
+    share machinery and the CLI, not findings."""
+    f_names = [f"f{i}_{kind}.py" for i in range(1, 7)
+               for kind in ("positive", "negative")]
+    code, out = lint_json(*f_names, rules="T")
+    assert code == 0, out["findings"]
+    t_names = [f"t{i}_{kind}.py" for i in range(1, 7)
+               for kind in ("positive", "negative")]
+    code, out = lint_json(*t_names, "pr2_device_put_closure.py",
+                          "suppression.py", rules="F")
+    assert code == 0, out["findings"]
+
+
+def test_combined_run_counts_files_once():
+    """--rules T,F over the whole corpus: one file count, both families'
+    findings in one sorted list under the shared JSON schema."""
+    code, out = lint_json(".", rules="T,F")
+    assert code == 1
+    n_files = len([f for f in os.listdir(FIXTURES) if f.endswith(".py")])
+    assert out["files"] == n_files
+    by_rule = {}
+    for f in out["findings"]:
+        by_rule[f["rule"]] = by_rule.get(f["rule"], 0) + 1
+        assert "_negative" not in f["path"]
+    assert by_rule == {"T1": 2, "T2": 2, "T3": 1, "T4": 3, "T5": 2,
+                       "T6": 3, "F1": 3, "F2": 1, "F3": 1, "F4": 2,
+                       "F5": 2, "F6": 2}
+    assert out["suppressed"] == 1
+
+
+def test_fedlint_suppression_prefix():
+    """`# fedlint: disable=F1` silences an F finding per line (and the
+    legacy `# tracelint:` prefix is interchangeable)."""
+    src = ("from repro.kernels.ops import graph_mix\n"
+           "def a(A, W):\n"
+           "    return graph_mix(A, W)  # fedlint: disable=F1\n"
+           "def b(A, W):\n"
+           "    return graph_mix(A, W)  # tracelint: disable=F1\n"
+           "def c(A, W):\n"
+           "    return graph_mix(A, W)\n")
+    findings = lint_source(src, path="x.py")
+    assert [(f.rule, f.suppressed) for f in findings] == \
+        [("F1", True), ("F1", True), ("F1", False)]
+
+
+def test_mesh_axes_override():
+    """--mesh-axes redefines what F5 accepts."""
+    code, out = lint_json("f5_positive.py")
+    assert code == 1 and len(out["findings"]) == 2
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        code = lint.main(
+            ["--format=json", "--rules", "F",
+             "--mesh-axes", "clients,client",
+             os.path.join(FIXTURES, "f5_positive.py")])
+    assert code == 0, json.loads(buf.getvalue())["findings"]
+
+
+def test_list_rules_respects_selector():
+    def rules_of(sel):
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            assert lint.main(["--rules", sel, "--list-rules"]) == 0
+        return [ln.split()[0] for ln in buf.getvalue().splitlines()]
+
+    assert rules_of("F") == sorted(F_RULES)
+    both = rules_of("T,F")
+    assert set(sorted(F_RULES)) < set(both) and "T1" in both
+
+
+def test_syntax_error_becomes_e0_finding():
+    findings = lint_source("def broken(:\n", path="x.py")
+    assert [f.rule for f in findings] == ["E0"]
+
+
+def test_clean_tree_lints_clean_under_f():
+    """The repo's own source must stay F-clean — same invocation as the
+    CI fedlint job (the acceptance-criteria command)."""
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        code = lint.main(["--format=json", "--rules", "F",
+                          "src", "benchmarks", "examples"])
+    out = json.loads(buf.getvalue())
+    assert code == 0, out["findings"]
+    assert out["findings"] == []

@@ -1,0 +1,140 @@
+"""`roofline/hlo.py` collective parsing on synthetic HLO fixtures:
+while-loop trip-count multiplication, conditional branch attribution,
+-start/-done async pairs, mixed replica-group formats and dtypes —
+the machinery `repro.analysis.commaudit` reconciles wire bytes with.
+Pure text parsing; no jax import on this path."""
+from repro.roofline.hlo import (HloModule, Collective, collect_collectives,
+                                replica_group_size, shape_bytes)
+
+# a round-loop shape: an 8-trip while whose body all-gathers a f32[2,2762]
+# panel every iteration and conditionally (branch 1) all-gathers a probe;
+# plus an async all-reduce pair and an int8 collective-permute
+SYNTH = """
+HloModule synth, entry_computation_layout={(f32[16,2762])->f32[16,2762]}
+
+%refresh_branch (p0: f32[2,2762]) -> f32[16,2762] {
+  %p0 = f32[2,2762] parameter(0)
+  %probe = f32[16,2762] all-gather(f32[2,2762] %p0), replica_groups=[1,8]<=[8], dimensions={0}
+  ROOT %r = f32[16,2762] copy(f32[16,2762] %probe)
+}
+
+%mix_branch (p0b: f32[2,2762]) -> f32[16,2762] {
+  %p0b = f32[2,2762] parameter(0)
+  %rot = f32[2,2762] collective-permute(f32[2,2762] %p0b), source_target_pairs={{0,1},{1,2},{2,3},{3,4},{4,5},{5,6},{6,7},{7,0}}
+  ROOT %rb = f32[16,2762] broadcast(f32[2,2762] %rot), dimensions={0,1}
+}
+
+%body (param: (s32[], f32[2,2762], pred[])) -> (s32[], f32[2,2762], pred[]) {
+  %param = (s32[], f32[2,2762], pred[]) parameter(0)
+  %t = s32[] get-tuple-element((s32[], f32[2,2762], pred[]) %param), index=0
+  %w = f32[2,2762] get-tuple-element((s32[], f32[2,2762], pred[]) %param), index=1
+  %pr = pred[] get-tuple-element((s32[], f32[2,2762], pred[]) %param), index=2
+  %panel = f32[16,2762] all-gather(f32[2,2762] %w), replica_groups=[1,8]<=[8], dimensions={0}
+  %q = s8[2,2762] convert(f32[2,2762] %w)
+  %qrot = s8[2,2762] collective-permute(s8[2,2762] %q), source_target_pairs={{0,1},{1,0}}
+  %ar = f32[] all-reduce-start(f32[] %t), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%sum
+  %ard = f32[] all-reduce-done(f32[] %ar)
+  %br = f32[16,2762] conditional(pred[] %pr, f32[2,2762] %w, f32[2,2762] %w), branch_computations={%mix_branch, %refresh_branch}
+  ROOT %out = (s32[], f32[2,2762], pred[]) tuple(s32[] %t, f32[2,2762] %w, pred[] %pr)
+}
+
+%cond (cparam: (s32[], f32[2,2762], pred[])) -> pred[] {
+  %cparam = (s32[], f32[2,2762], pred[]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main (arg: f32[16,2762]) -> f32[16,2762] {
+  %arg = f32[16,2762] parameter(0)
+  %init = (s32[], f32[2,2762], pred[]) tuple()
+  %loop = (s32[], f32[2,2762], pred[]) while((s32[], f32[2,2762], pred[]) %init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"8"}}
+  ROOT %res = f32[16,2762] get-tuple-element((s32[], f32[2,2762], pred[]) %loop), index=1
+}
+"""
+
+PANEL = 2 * 2762 * 4      # f32[2,2762] per-device operand
+PANEL_I8 = 2 * 2762      # s8[2,2762]
+
+
+def by_name(colls, name):
+    return next(c for c in colls if c.name == name)
+
+
+def test_while_trip_count_multiplies():
+    colls = collect_collectives(SYNTH)
+    panel = by_name(colls, "panel")
+    assert panel.kind == "all-gather"
+    assert panel.operand_bytes == PANEL
+    assert panel.mult == 8
+    assert panel.path == ("entry", "while")
+
+
+def test_conditional_branches_are_attributed_not_summed():
+    colls = collect_collectives(SYNTH)
+    rot = by_name(colls, "rot")
+    probe = by_name(colls, "probe")
+    assert rot.path == ("entry", "while", "cond[0]")
+    assert probe.path == ("entry", "while", "cond[1]")
+    # both still inherit the loop multiplicity
+    assert rot.mult == probe.mult == 8
+
+
+def test_async_pair_counts_once_and_dtypes_resolve():
+    colls = collect_collectives(SYNTH)
+    ars = [c for c in colls if c.kind == "all-reduce"]
+    assert len(ars) == 1 and ars[0].name == "ar"
+    qrot = by_name(colls, "qrot")
+    assert qrot.kind == "collective-permute"
+    assert qrot.operand_bytes == PANEL_I8
+
+
+def test_replica_group_sizes():
+    colls = collect_collectives(SYNTH)
+    assert by_name(colls, "panel").group_size == 8
+    assert by_name(colls, "ar").group_size == 4   # explicit {{0..3},{4..7}}
+    # collective-permute carries source_target_pairs, not replica_groups
+    assert by_name(colls, "rot").group_size is None
+
+
+def test_replica_group_size_formats():
+    assert replica_group_size("replica_groups=[4,2]<=[8]") == 2
+    assert replica_group_size(
+        "replica_groups=[2,4]<=[2,2,2]T(1,0,2)") == 4
+    assert replica_group_size("replica_groups={{0,1},{2,3}}") == 2
+    assert replica_group_size("replica_groups={{0},{1,2}}") is None  # ragged
+    assert replica_group_size("source_target_pairs={{0,1}}") is None
+
+
+def test_analyze_upper_bounds_branch_aware_total():
+    """`HloModule.analyze` sums both conditional branches (a deliberate
+    upper bound); collect_collectives attributes them. The analyze total
+    must therefore equal the sum over ALL paths."""
+    m = HloModule(SYNTH)
+    tot = m.analyze()
+    colls = collect_collectives(m)
+    per_kind = {}
+    for c in colls:
+        per_kind[c.kind] = per_kind.get(c.kind, 0) + c.operand_bytes * c.mult
+    for kind, b in per_kind.items():
+        assert tot.coll_bytes[kind] == b, kind
+
+
+def test_shape_bytes_tuple_and_empty_dims():
+    assert shape_bytes("(s32[], f32[2,2762], pred[])") == \
+        4 + PANEL + 1
+    assert shape_bytes("f32[]") == 4
+
+
+def test_no_entry_returns_empty():
+    assert collect_collectives("HloModule empty\n") == []
+
+
+def test_collective_dataclass_fields():
+    c = collect_collectives(SYNTH)[0]
+    assert isinstance(c, Collective)
+    assert set(c.attrs) and isinstance(c.path, tuple)

@@ -19,8 +19,10 @@ FIXTURES = os.path.join(os.path.dirname(__file__), "lint_fixtures")
 
 
 def lint_json(*names, show_suppressed=False):
-    argv = ["--format=json"] + (["--show-suppressed"] if show_suppressed
-                                else [])
+    # pin --rules T: this corpus also hosts the fedlint (F-rule) fixtures,
+    # exercised by tests/test_fedlint.py through the same CLI
+    argv = ["--format=json", "--rules", "T"] + \
+        (["--show-suppressed"] if show_suppressed else [])
     argv += [os.path.join(FIXTURES, n) for n in names]
     buf = io.StringIO()
     with contextlib.redirect_stdout(buf):
