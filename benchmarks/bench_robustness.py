@@ -1,0 +1,144 @@
+"""Robustness benchmark: rounds/sec, benign/malicious accuracy and the
+Fig.-4 graph-segregation history of the compiled DPFL round engine
+across attack x fraction x mix_rule x graph_repr (DESIGN.md §15).
+
+  PYTHONPATH=src python -m benchmarks.bench_robustness
+  PYTHONPATH=src python -m benchmarks.bench_robustness --smoke --mesh
+
+Each cell runs the adversary-aware round_step (attack schedule riding in
+RoundState.aux["adv"]) and reports the benign->malicious edge rate over
+rounds via the shared `segregation_history` helper — GGC reacting to the
+attack shows as that rate falling from round 0 to the final round while
+the benign-within rate stays up. One adversary-free weighted baseline
+per graph representation anchors the throughput ratios for
+`check_regression --robust-*`. ``--smoke`` shrinks every size for CI
+and asserts the segregation criterion on the label-flip GGC cells.
+Writes ``benchmarks/results/BENCH_robustness.json``.
+"""
+import argparse
+import json
+import os
+
+from benchmarks.bench_participation import time_run
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT = os.path.join(ROOT, "benchmarks", "results")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--attacks",
+                    default="label_flip,grad_scale,sign_flip,free_rider")
+    ap.add_argument("--fractions", default="0.4")
+    ap.add_argument("--mix-rules", default="weighted,trimmed,clipped")
+    ap.add_argument("--graph-reprs", default="dense,sparse")
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--budget", type=int, default=8)
+    ap.add_argument("--tau", type=int, default=3)
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the client axis over all visible devices")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI sizes + segregation correctness check")
+    ap.add_argument("--out", default=os.path.join(
+        OUT, "BENCH_robustness.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        # 16 clients: divisible by the CI's 8 forced devices (--mesh)
+        args.rounds, args.clients, args.tau, args.budget = 6, 16, 1, 6
+        args.attacks = "label_flip,grad_scale"
+        args.mix_rules = "weighted,trimmed"
+
+    import jax
+    import numpy as np
+
+    from benchmarks.common import standard_setting
+    from repro.core import (AdversaryConfig, DPFLConfig, run_dpfl,
+                            segregation_history)
+    from repro.launch.mesh import make_client_mesh
+
+    # noise high enough that the greedy refresh cannot identify the
+    # attackers in its first pass — segregation then DEVELOPS over
+    # rounds (the Fig.-4 story) instead of completing at round 0
+    _, _, engine = standard_setting(n_clients=args.clients, noise=3.0)
+    devices = 1
+    if args.mesh:
+        devices = len(jax.devices())
+        engine.shard_clients(make_client_mesh(devices))
+    kw = dict(tau_init=2, tau_train=args.tau, budget=args.budget, seed=0)
+
+    def run(rounds, adv=None, rule="weighted", repr_="dense",
+            history=True):
+        return run_dpfl(engine, DPFLConfig(
+            rounds=rounds, adversary=adv, mix_rule=rule,
+            graph_repr=repr_, track_history=history, **kw))
+
+    rows = []
+    t_rounds = max(args.rounds, 16)
+    print("attack,fraction,mix_rule,graph_repr,rounds_per_s,"
+          "benign_acc,malicious_acc,edge_rate_first,edge_rate_last")
+    baselines = {}
+    for repr_ in args.graph_reprs.split(","):
+        rps = time_run(lambda r, g=repr_: run(r, repr_=g, history=False),
+                       t_rounds)
+        res = run(args.rounds, repr_=repr_)
+        baselines[repr_] = rps
+        rows.append({"attack": "none", "fraction": 0.0,
+                     "mix_rule": "weighted", "graph_repr": repr_,
+                     "rounds_per_s": rps,
+                     "benign_acc": float(res.test_acc.mean()),
+                     "malicious_acc": None, "edge_rate_hist": None,
+                     "comm_total": int(sum(res.comm_downloads))})
+        print(f"none,0.0,weighted,{repr_},{rps:.3f},"
+              f"{rows[-1]['benign_acc']:.4f},,,")
+
+    for attack in args.attacks.split(","):
+        for frac in (float(f) for f in args.fractions.split(",")):
+            adv = AdversaryConfig(attack=attack, fraction=frac, seed=1)
+            for rule in args.mix_rules.split(","):
+                for repr_ in args.graph_reprs.split(","):
+                    rps = time_run(
+                        lambda r, a=adv, m=rule, g=repr_:
+                        run(r, a, m, g, history=False), t_rounds)
+                    res = run(args.rounds, adv, rule, repr_)
+                    mal = res.malicious
+                    seg = segregation_history(res.graph_history, mal)
+                    cross = seg["benign_to_malicious"]
+                    row = {"attack": attack, "fraction": frac,
+                           "mix_rule": rule, "graph_repr": repr_,
+                           "rounds_per_s": rps,
+                           "benign_acc":
+                               float(res.test_acc[~mal].mean()),
+                           "malicious_acc":
+                               float(res.test_acc[mal].mean()),
+                           "edge_rate_hist":
+                               [round(c, 4) for c in cross],
+                           "benign_edge_hist":
+                               [round(w, 4) for w in
+                                seg["benign_to_benign"]],
+                           "comm_total":
+                               int(sum(res.comm_downloads))}
+                    rows.append(row)
+                    print(f"{attack},{frac},{rule},{repr_},{rps:.3f},"
+                          f"{row['benign_acc']:.4f},"
+                          f"{row['malicious_acc']:.4f},"
+                          f"{cross[0]:.3f},{cross[-1]:.3f}")
+                    if args.smoke and attack == "label_flip" and frac:
+                        # the acceptance criterion: GGC reacts to the
+                        # attack — the benign->malicious edge rate at
+                        # the final round is strictly below round 0
+                        assert cross[-1] < cross[0], (attack, rule,
+                                                      repr_, cross)
+
+    rec = {"workload": "dpfl_robustness_sweep", "clients": args.clients,
+           "rounds": args.rounds, "budget": args.budget, "tau": args.tau,
+           "devices": devices, "mesh": bool(args.mesh),
+           "baseline_rounds_per_s": baselines, "rows": rows}
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        json.dump(rec, open(args.out, "w"), indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

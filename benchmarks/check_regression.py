@@ -35,6 +35,19 @@ committed grid). The same two-signal rule applies per intersecting
 sparse/dense pair: the machine-normalized sparse/dense throughput ratio
 AND the absolute sparse rounds/sec must both drop beyond tolerance to
 fail. Both modes may be given in one invocation.
+
+A third mode gates the committed robustness sweep::
+
+  python -m benchmarks.check_regression \
+      --robust-fresh /tmp/BENCH_robust_fresh.json \
+      --robust-committed benchmarks/results/BENCH_robustness.json
+
+Cells are keyed (attack, fraction, mix_rule, graph_repr); only keys in
+BOTH records are compared, sizes must match. Per cell the two signals
+are the throughput normalized by the record's own adversary-free
+baseline for the same graph representation (machine-independent) and
+the absolute rounds/sec — both must drop beyond tolerance to fail.
+All modes may be combined in one invocation.
 """
 import argparse
 import json
@@ -112,17 +125,73 @@ def check_sparse(fresh: dict, committed: dict, tolerance: float) -> bool:
     return ok
 
 
+def _robust_key(r):
+    return (r["attack"], r["fraction"], r["mix_rule"], r["graph_repr"])
+
+
+def check_robust(fresh: dict, committed: dict, tolerance: float) -> bool:
+    """Gate the robustness-sweep cells. True when passing."""
+    for rec, name in ((fresh, "fresh"), (committed, "committed")):
+        if rec.get("workload") != "dpfl_robustness_sweep":
+            print(f"FAIL: {name} record is not a dpfl_robustness_sweep "
+                  f"benchmark")
+            return False
+    if (fresh["rounds"], fresh["clients"]) != (committed["rounds"],
+                                               committed["clients"]):
+        print("FAIL: fresh and committed robustness runs used different "
+              f"sizes: {fresh['rounds']}x{fresh['clients']} vs "
+              f"{committed['rounds']}x{committed['clients']}")
+        return False
+    fc = {_robust_key(r): r["rounds_per_s"] for r in fresh["rows"]}
+    cc = {_robust_key(r): r["rounds_per_s"] for r in committed["rows"]}
+    fb = fresh["baseline_rounds_per_s"]
+    cb = committed["baseline_rounds_per_s"]
+    inter = sorted(set(fc) & set(cc))
+    if not inter:
+        print("FAIL: no intersecting (attack,fraction,mix_rule,"
+              "graph_repr) cells between fresh and committed records")
+        return False
+    floor = 1.0 - tolerance
+    ok = True
+    print("attack,fraction,mix_rule,graph_repr,committed,fresh,ratio")
+    for k in inter:
+        print(f"{','.join(map(str, k))},{cc[k]:.3f},{fc[k]:.3f},"
+              f"{fc[k] / cc[k]:.3f}")
+        repr_ = k[3]
+        if k[0] == "none" or repr_ not in fb or repr_ not in cb:
+            continue  # the baselines themselves anchor the ratios
+        rel_old, rel_new = cc[k] / cb[repr_], fc[k] / fb[repr_]
+        abs_reg = fc[k] / cc[k] < floor
+        rel_reg = rel_new / rel_old < floor
+        if abs_reg and rel_reg:
+            print(f"FAIL: {k} regressed >{tolerance:.0%} on both the "
+                  f"baseline-normalized ratio ({rel_old:.2f} -> "
+                  f"{rel_new:.2f}) and absolute rounds/sec "
+                  f"({cc[k]:.2f} -> {fc[k]:.2f})")
+            ok = False
+        elif abs_reg or rel_reg:
+            print(f"warn: {k} regressed on "
+                  f"{'absolute' if abs_reg else 'ratio'} only — "
+                  f"attributing to runner variance")
+    if ok:
+        print("ok: robustness cells within tolerance")
+    return ok
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh")
     ap.add_argument("--committed")
     ap.add_argument("--sparse-fresh")
     ap.add_argument("--sparse-committed")
+    ap.add_argument("--robust-fresh")
+    ap.add_argument("--robust-committed")
     ap.add_argument("--tolerance", type=float, default=0.30)
     args = ap.parse_args()
-    if not (args.fresh or args.sparse_fresh):
-        ap.error("need --fresh/--committed and/or "
-                 "--sparse-fresh/--sparse-committed")
+    if not (args.fresh or args.sparse_fresh or args.robust_fresh):
+        ap.error("need --fresh/--committed, --sparse-fresh/"
+                 "--sparse-committed and/or --robust-fresh/"
+                 "--robust-committed")
     ok = True
     if args.fresh or args.committed:
         if not (args.fresh and args.committed):
@@ -144,6 +213,12 @@ def main():
             ap.error("--sparse-fresh and --sparse-committed go together")
         ok = check_sparse(json.load(open(args.sparse_fresh)),
                           json.load(open(args.sparse_committed)),
+                          args.tolerance) and ok
+    if args.robust_fresh or args.robust_committed:
+        if not (args.robust_fresh and args.robust_committed):
+            ap.error("--robust-fresh and --robust-committed go together")
+        ok = check_robust(json.load(open(args.robust_fresh)),
+                          json.load(open(args.robust_committed)),
                           args.tolerance) and ok
     if not ok:
         sys.exit(1)

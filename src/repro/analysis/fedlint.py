@@ -80,7 +80,8 @@ _MIX_KERNELS = {"graph_mix", "sparse_graph_mix", "compressed_graph_mix"}
 _CLIENT_EINSUMS = {"ij,j...->i...", "n,np->p", "n,n...->..."}
 
 _PLAIN_MIXERS = {"mix_flat", "mix_flat_sparse", "graph_mix"}
-_WEIGHT_BUILDERS = {"mixing_matrix", "sparse_mixing_weights"}
+_WEIGHT_BUILDERS = {"mixing_matrix", "sparse_mixing_weights",
+                    "eq4_weights_unnormalized", "sparse_eq4_unnormalized"}
 _COMM_COUNTER_NAMES = {
     "comm", "comm_downloads", "comm_bytes", "comm_t", "comm_preprocess",
     "count_neighbor_downloads", "_realized_downloads",

@@ -5,7 +5,11 @@ dpfl.py  — the alternating-minimization driver (Alg. 1)
 distributed.py — cross-pod DPFL mixing on the production mesh
 """
 from ..data.availability import ParticipationConfig
+from ..fl.adversary import (ATTACKS, AdversaryConfig, attack_schedule,
+                            edge_rates, malicious_mask,
+                            segregation_history)
 from ..fl.compress import CompressionConfig
+from ..fl.robust import MIX_RULES
 from .dpfl import (DPFLConfig, DPFLResult, abstract_round_state,
                    dpfl_round_step, graph_stats, run_dpfl,
                    run_dpfl_reference)
@@ -13,15 +17,20 @@ from .graph import (GreedyCarry, adjacency_from_neighbors,
                     all_clients_bggc, all_clients_bggc_sparse,
                     all_clients_graph, all_clients_graph_heterogeneous,
                     all_clients_graph_sparse, count_neighbor_downloads,
-                    greedy_decision_step, make_bggc, make_ggc,
-                    make_ggc_heterogeneous, make_ggc_naive,
-                    make_ggc_sparse, mask_to_neighbors, mix_flat,
-                    mix_flat_sparse, mix_pytree, mixing_matrix,
-                    neighbors_from_adjacency, sparse_mixing_weights)
+                    eq4_weights_unnormalized, greedy_decision_step,
+                    make_bggc, make_ggc, make_ggc_heterogeneous,
+                    make_ggc_naive, make_ggc_sparse, mask_to_neighbors,
+                    mix_flat, mix_flat_sparse, mix_pytree, mixing_matrix,
+                    neighbors_from_adjacency, sparse_eq4_unnormalized,
+                    sparse_mixing_weights)
 
 __all__ = [
     "DPFLConfig", "DPFLResult", "ParticipationConfig",
     "CompressionConfig",
+    "ATTACKS", "AdversaryConfig", "MIX_RULES",
+    "attack_schedule", "malicious_mask", "edge_rates",
+    "segregation_history",
+    "eq4_weights_unnormalized", "sparse_eq4_unnormalized",
     "run_dpfl", "run_dpfl_reference",
     "graph_stats", "dpfl_round_step", "abstract_round_state",
     "GreedyCarry", "greedy_decision_step",

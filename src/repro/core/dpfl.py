@@ -33,16 +33,21 @@ import numpy as np
 from jax.sharding import PartitionSpec as PSpec
 
 from ..data.availability import ParticipationConfig, schedule_for_data
+from ..fl import adversary as _adversary
 from ..fl import compress as _compress
+from ..fl import robust as _robust
 from ..analysis.registry import exchange_site
+from ..fl.adversary import AdversaryConfig
 from ..fl.compress import CompressionConfig
 from ..fl.engine import FLEngine
+from ..fl.robust import MIX_RULES
 from ..fl.round_engine import (RoundState, init_round_state, make_round_step,
                                run_rounds, shard_round_state)
 from .graph import (all_clients_bggc, all_clients_bggc_sparse,
                     all_clients_graph, all_clients_graph_sparse,
-                    count_neighbor_downloads, mixing_matrix, mix_flat,
-                    mix_flat_sparse, sparse_mixing_weights)
+                    count_neighbor_downloads, eq4_weights_unnormalized,
+                    mixing_matrix, mix_flat, mix_flat_sparse,
+                    sparse_eq4_unnormalized, sparse_mixing_weights)
 
 
 @dataclass
@@ -85,6 +90,24 @@ class DPFLConfig:
     # away before tracing). Preprocessing exchanges raw fp32 models (the
     # candidate graph is built on full-fidelity models, before any EF
     # state exists) and is charged at the raw rate.
+    adversary: Optional[AdversaryConfig] = None
+    # adversarial clients (DESIGN.md §15): a seeded (rounds, N) attack
+    # schedule rides in aux["adv"]; attacks apply inside the compiled
+    # round_step (label_flip via the local-train hook, grad_scale/
+    # sign_flip/free_rider via the post_train hook + wire table). None
+    # — and fraction=0.0 with the default mix_rule — is bitwise-
+    # identical to the adversary-free step on one device (tested).
+    # Preprocessing (tau_init + BGGC) runs before the schedule starts
+    # and is attack-free: Omega is built on clean models, so robustness
+    # benchmarks measure how the GGC refresh REACTS to attacks.
+    mix_rule: str = "weighted"
+    # Eq.-4 aggregation rule (DESIGN.md §15): "weighted" = the paper's
+    # weighted average (default; bitwise-identical to the pre-robustness
+    # path), "trimmed" = coordinate-wise trimmed mean over the decoded
+    # peer panel (trim_frac per tail), "clipped" = per-peer update-norm
+    # clipping relative to self (clip_mult x own update norm).
+    trim_frac: float = 0.2            # mix_rule="trimmed": per-tail frac
+    clip_mult: float = 1.0            # mix_rule="clipped": tau multiplier
 
 @dataclass
 class DPFLResult:
@@ -112,6 +135,8 @@ class DPFLResult:
     comm_bytes_preprocess: int = 0
     participation: Optional[np.ndarray] = None  # (rounds, N) realized
     #                                             schedule, if enabled
+    malicious: Optional[np.ndarray] = None      # (N,) bool malicious set,
+    #                                             if an adversary ran
 
 
 def _nbr_to_adj_np(idx: np.ndarray, n: int) -> np.ndarray:
@@ -185,6 +210,19 @@ def _sparse(cfg: DPFLConfig) -> bool:
         raise ValueError("graph_repr='sparse' supports graph_impl='ggc' "
                          "only (the naive oracle is dense-only)")
     return cfg.graph_repr == "sparse"
+
+
+def _mix_rule(cfg: DPFLConfig) -> str:
+    """Validated Eq.-4 aggregation rule (DESIGN.md §15)."""
+    if cfg.mix_rule not in MIX_RULES:
+        raise ValueError(f"mix_rule must be one of {MIX_RULES}, "
+                         f"got {cfg.mix_rule!r}")
+    if cfg.mix_rule == "trimmed" and not 0.0 <= cfg.trim_frac < 0.5:
+        raise ValueError(f"trim_frac must be in [0, 0.5), "
+                         f"got {cfg.trim_frac}")
+    if cfg.mix_rule == "clipped" and cfg.clip_mult <= 0.0:
+        raise ValueError(f"clip_mult must be > 0, got {cfg.clip_mult}")
+    return cfg.mix_rule
 
 
 def _nbr_width(N: int, budget: int) -> int:
@@ -312,26 +350,43 @@ def _make_dpfl_aggregate(engine: FLEngine, cfg: DPFLConfig, reward_fn,
     update in client-sharded aux["ef"] (absent clients transmit nothing,
     so their residuals hold). The `identity` codec normalizes to None and
     this function emits the exact pre-compression trace.
+
+    With ``cfg.adversary`` (DESIGN.md §15), everything peers SEE — the
+    refresh probes, the codec input, the off-diagonal mix — reads the
+    WIRE table: identical to ``flat`` except that active free riders
+    swap in their stale/noise upload; the self-mix term keeps reading
+    the exact local row. ``cfg.mix_rule`` selects the Eq.-4 aggregation:
+    "weighted" is the paper's rule verbatim, "trimmed"/"clipped"
+    (`repro.fl.robust`) bound a poisoned peer's influence; the clipped
+    rule's reference point is the round-start panel (``prev``).
     """
     p = engine.p
     mesh, ca = engine.mesh, engine.client_axes
     part = cfg.participation is not None
     comp = _compress.normalize(cfg.compression)
     ef = comp is not None and _compress.uses_ef(comp)
+    adv = cfg.adversary
+    fr = _adversary.free_rider_active(adv)
+    rule = _mix_rule(cfg)
 
     # bare @exchange_site: this aggregate charges its own bytes — the
     # aux["comm"] counters below (fedlint F2 verifies the body does)
     @exchange_site
-    def aggregate(flat, aux, t):
+    def aggregate(flat, aux, t, prev=None):
         adj = aux["adj"]
         omega = aux["omega"]
         N = adj.shape[0]
         active = aux["part"][t] if part else None
+        # the peer-visible upload table; trace-gated on a STATIC config
+        # predicate so fraction=0.0 keeps the adversary-free trace
+        wire = _adversary.wire_view(
+            adv, flat, aux["adv"]["sched"][t],
+            aux["adv"]["key"], t) if fr else flat
         if comp is None:
-            probe_w, payload, dec, new_ef = flat, None, None, None
+            probe_w, payload, dec, new_ef = wire, None, None, None
         else:
             payload, dec, new_ef = _compress.compress_exchange(
-                comp, flat, aux["ef"] if ef else None,
+                comp, wire, aux["ef"] if ef else None,
                 jax.random.fold_in(aux["k_comp"], t),
                 mesh=mesh, client_axes=ca)
             probe_w = dec
@@ -372,14 +427,36 @@ def _make_dpfl_aggregate(engine: FLEngine, cfg: DPFLConfig, reward_fn,
                         mix_impl=cfg.mix_impl, mesh=mesh, client_axes=ca)
             new_adj = jax.lax.cond(refresh, do_refresh, lambda f: adj,
                                    probe_w)
-        A = mixing_matrix(new_adj, p, active=active)
-        if comp is None:
-            mixed = mix_flat(A, flat, impl=cfg.mix_impl, mesh=mesh,
-                             client_axes=ca)
+        # recv = what row k receives from peer i: decoded payloads under
+        # compression, the wire table under free-riding, flat otherwise
+        recv = dec if comp is not None else wire
+        if rule == "trimmed":
+            w_un = eq4_weights_unnormalized(new_adj, p, active=active)
+            mixed = _robust.trimmed_mix_dense(w_un, flat, recv,
+                                              cfg.trim_frac)
         else:
-            mixed = _compress.mix_compressed(
-                comp, A, flat, payload, dec, impl=cfg.mix_impl, mesh=mesh,
-                client_axes=ca)
+            A = mixing_matrix(new_adj, p, active=active)
+            if rule == "clipped":
+                gamma = _robust.clip_factors(recv, flat, prev,
+                                             cfg.clip_mult)
+                A = _robust.clipped_matrix(A, gamma)
+            if comp is None:
+                if fr:
+                    # peers mix the wire table, the self term stays the
+                    # exact local row — the same off-diagonal/diagonal
+                    # split `mix_compressed` makes (DESIGN.md §11)
+                    diag = jnp.diagonal(A)
+                    A_off = A * (1.0 - jnp.eye(N, dtype=A.dtype))
+                    mixed = mix_flat(A_off, wire, impl=cfg.mix_impl,
+                                     mesh=mesh, client_axes=ca) \
+                        + diag[:, None] * flat
+                else:
+                    mixed = mix_flat(A, flat, impl=cfg.mix_impl,
+                                     mesh=mesh, client_axes=ca)
+            else:
+                mixed = _compress.mix_compressed(
+                    comp, A, flat, payload, dec, impl=cfg.mix_impl,
+                    mesh=mesh, client_axes=ca)
         aux = dict(aux, adj=new_adj,
                    comm=aux["comm"].at[t].set(comm_t.astype(jnp.int32)))
         if ef:
@@ -411,19 +488,27 @@ def _make_dpfl_aggregate_sparse(engine: FLEngine, cfg: DPFLConfig,
     part = cfg.participation is not None
     comp = _compress.normalize(cfg.compression)
     ef = comp is not None and _compress.uses_ef(comp)
+    adv = cfg.adversary
+    fr = _adversary.free_rider_active(adv)
+    rule = _mix_rule(cfg)
 
     # bare @exchange_site: this aggregate charges its own bytes — the
     # aux["comm"] counters below (fedlint F2 verifies the body does)
     @exchange_site
-    def aggregate(flat, aux, t):
+    def aggregate(flat, aux, t, prev=None):
         nbr = aux["nbr"]
         omega = aux["omega_nbr"]
         active = aux["part"][t] if part else None
+        # peer-visible upload table (free riders swap in stale/noise
+        # rows); static-gated so fraction=0.0 keeps the old trace
+        wire = _adversary.wire_view(
+            adv, flat, aux["adv"]["sched"][t],
+            aux["adv"]["key"], t) if fr else flat
         if comp is None:
-            probe_w, payload, dec, new_ef = flat, None, None, None
+            probe_w, payload, dec, new_ef = wire, None, None, None
         else:
             payload, dec, new_ef = _compress.compress_exchange(
-                comp, flat, aux["ef"] if ef else None,
+                comp, wire, aux["ef"] if ef else None,
                 jax.random.fold_in(aux["k_comp"], t),
                 mesh=mesh, client_axes=ca)
             probe_w = dec
@@ -451,15 +536,33 @@ def _make_dpfl_aggregate_sparse(engine: FLEngine, cfg: DPFLConfig,
 
             new_nbr = jax.lax.cond(refresh, do_refresh, lambda f: nbr,
                                    probe_w)
-        self_w, nbr_w = sparse_mixing_weights(new_nbr, p, active=active)
-        if comp is None:
-            mixed = mix_flat_sparse(self_w, nbr_w, new_nbr, flat,
-                                    impl=cfg.mix_impl, mesh=mesh,
-                                    client_axes=ca)
+        # recv = peer-visible model table row k gathers from (decoded
+        # payloads under compression, the wire table under free-riding)
+        recv = dec if comp is not None else wire
+        if rule == "trimmed":
+            p_un, w_un = sparse_eq4_unnormalized(new_nbr, p,
+                                                 active=active)
+            mixed = _robust.trimmed_mix_sparse(p_un, w_un, new_nbr, flat,
+                                               recv, cfg.trim_frac)
         else:
-            mixed = _compress.sparse_mix_compressed(
-                comp, self_w, nbr_w, new_nbr, flat, payload, dec,
-                impl=cfg.mix_impl, mesh=mesh, client_axes=ca)
+            self_w, nbr_w = sparse_mixing_weights(new_nbr, p,
+                                                  active=active)
+            if rule == "clipped":
+                N = flat.shape[0]
+                safe = jnp.clip(new_nbr, 0, N - 1)
+                gamma = _robust.clip_factors_sparse(
+                    recv[safe], flat, prev, cfg.clip_mult)
+                self_w, nbr_w = _robust.clipped_sparse_weights(
+                    self_w, nbr_w, gamma)
+            if comp is None:
+                mixed = mix_flat_sparse(
+                    self_w, nbr_w, new_nbr, flat,
+                    peers=wire if fr else None,
+                    impl=cfg.mix_impl, mesh=mesh, client_axes=ca)
+            else:
+                mixed = _compress.sparse_mix_compressed(
+                    comp, self_w, nbr_w, new_nbr, flat, payload, dec,
+                    impl=cfg.mix_impl, mesh=mesh, client_axes=ca)
         aux = dict(aux, nbr=new_nbr,
                    comm=aux["comm"].at[t].set(comm_t.astype(jnp.int32)))
         if ef:
@@ -474,12 +577,12 @@ def _make_dpfl_aggregate_sparse(engine: FLEngine, cfg: DPFLConfig,
 
 def _dpfl_aux_specs(engine: FLEngine, hist_len: int,
                     participation: bool = False, comp=None,
-                    sparse: bool = False):
+                    sparse: bool = False, adversary: bool = False):
     """PartitionSpecs for the DPFL aux pytree on the client mesh: the
     graph (adjacency rows or neighbor lists), Omega, graph history, the
-    participation schedule and the error-feedback residuals shard their
-    client axis; the graph and codec keys and the comm counters
-    replicate."""
+    participation/attack schedules and the error-feedback residuals
+    shard their client axis; the graph/codec/adversary keys and the comm
+    counters replicate."""
     if engine.mesh is None:
         return None
     ca = tuple(engine.client_axes)
@@ -497,6 +600,8 @@ def _dpfl_aux_specs(engine: FLEngine, hist_len: int,
         specs["k_comp"] = PSpec()
         if _compress.uses_ef(comp):
             specs["ef"] = PSpec(ca, None)
+    if adversary:
+        specs["adv"] = {"sched": PSpec(None, ca), "key": PSpec()}
     return specs
 
 
@@ -515,9 +620,11 @@ def _cached_round_step(engine: FLEngine, cfg: DPFLConfig, budget: int,
     part = cfg.participation is not None
     comp = _compress.normalize(cfg.compression)
     sparse = _sparse(cfg)
+    adv = cfg.adversary
     key = (cfg.tau_train, cfg.refresh_period, cfg.random_graph,
            cfg.graph_impl, cfg.mix_impl, budget, hist_len, part, comp,
-           sparse, engine.mesh, engine.client_axes, donate)
+           sparse, engine.mesh, engine.client_axes, donate,
+           adv, _mix_rule(cfg), cfg.trim_frac, cfg.clip_mult)
     if key not in cache:
         reward_fn = engine.make_reward_fn()
         make_agg = (_make_dpfl_aggregate_sparse if sparse
@@ -525,9 +632,13 @@ def _cached_round_step(engine: FLEngine, cfg: DPFLConfig, budget: int,
         aggregate = make_agg(engine, cfg, reward_fn, budget, hist_len)
         cache[key] = make_round_step(
             engine, tau=cfg.tau_train, aggregate=aggregate,
+            local_train=(_adversary.make_adv_local_train(engine, adv)
+                         if adv is not None else None),
+            post_train=(_adversary.make_post_train(adv)
+                        if adv is not None else None),
             hist_len=hist_len,
             aux_specs=_dpfl_aux_specs(engine, hist_len, part, comp,
-                                      sparse),
+                                      sparse, adv is not None),
             participation_key="part" if part else None,
             donate=donate)
     return cache[key]
@@ -572,6 +683,11 @@ def run_dpfl(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
         aux["k_comp"] = _comp_base_key(cfg.seed)
         if _compress.uses_ef(comp):
             aux["ef"] = jnp.zeros_like(flat)
+    if cfg.adversary is not None:
+        sched_adv = _adversary.attack_schedule(cfg.adversary, cfg.rounds, N)
+        aux["adv"] = {"sched": jnp.asarray(sched_adv),
+                      "key": _adversary.adv_base_key(cfg.adversary.seed)}
+        result.malicious = _adversary.malicious_mask(cfg.adversary, N)
     round_step = _cached_round_step(engine, cfg, budget, hist_len)
     state = init_round_state(flat, k_train, hist_len=hist_len, aux=aux)
     if engine.mesh is not None:
@@ -581,7 +697,8 @@ def run_dpfl(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
             state, engine.mesh, engine.client_axes,
             aux_specs=_dpfl_aux_specs(engine, hist_len,
                                       cfg.participation is not None,
-                                      comp, sparse))
+                                      comp, sparse,
+                                      cfg.adversary is not None))
 
     def flush_histories(st, k):
         # the ONLY host transfers: every hist_len rounds + once at the
@@ -639,23 +756,50 @@ def run_dpfl_reference(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
     use_ef = comp is not None and _compress.uses_ef(comp)
     ef = jnp.zeros_like(flat) if use_ef else None
     k_comp = _comp_base_key(cfg.seed) if comp is not None else None
+    adv = cfg.adversary
+    rule = _mix_rule(cfg)
+    fr = _adversary.free_rider_active(adv)
+    sched_adv = flip_y = train_y = adv_key = None
+    if adv is not None:
+        # same host schedules / PRNG streams as the engine path
+        sched_adv = _adversary.attack_schedule(adv, cfg.rounds, N)
+        adv_key = _adversary.adv_base_key(adv.seed)
+        result.malicious = _adversary.malicious_mask(adv, N)
+        if adv.attack == "label_flip":
+            train_y = engine.train_data[1]
+            flip_y = jnp.asarray(_adversary.label_permutation(
+                adv, engine.data.n_classes))[train_y]
 
     for t in range(cfg.rounds):
         prev_flat = flat
-        stacked, _ = engine.local_train(
-            stacked, jax.random.fold_in(k_train, t), epochs=cfg.tau_train)
+        adv_row = (jnp.asarray(sched_adv[t]) if adv is not None else None)
+        if flip_y is not None:
+            # data-level attack: attacking rows train on deranged labels
+            ys = jnp.where(adv_row[:, None], flip_y, train_y)
+            stacked, _ = engine.local_train_with_labels(
+                stacked, jax.random.fold_in(k_train, t),
+                epochs=cfg.tau_train, ys=ys)
+        else:
+            stacked, _ = engine.local_train(
+                stacked, jax.random.fold_in(k_train, t),
+                epochs=cfg.tau_train)
         flat = engine.flatten(stacked)
         active = None
         if sched is not None:
             # absent clients hold their round-start params
             active = jnp.asarray(sched[t])
             flat = jnp.where(active[:, None], flat, prev_flat)
-        probe_w, payload, dec = flat, None, None
+        if adv is not None:
+            # model poisoning after the hold (identity for label_flip)
+            flat = _adversary.poison_update(adv, flat, prev_flat, adv_row)
+        wire = (_adversary.wire_view(adv, flat, adv_row, adv_key, t)
+                if fr else flat)
+        probe_w, payload, dec = wire, None, None
         if comp is not None:
             # peers exchange the codec payload of C(x + e); the refresh
             # probes and the mix both consume it (DESIGN.md §11)
             payload, dec, new_ef = _compress.compress_exchange(
-                comp, flat, ef, jax.random.fold_in(k_comp, t))
+                comp, wire, ef, jax.random.fold_in(k_comp, t))
             probe_w = dec
             if use_ef:
                 ef = new_ef if active is None else \
@@ -687,19 +831,48 @@ def run_dpfl_reference(engine: FLEngine, cfg: DPFLConfig) -> DPFLResult:
                 mix_impl=cfg.mix_impl)
             adj = refreshed if active is None else \
                 jnp.where(active[:, None], refreshed, adj)
+        recv = dec if comp is not None else wire
         if sparse:
-            self_w, nbr_w = sparse_mixing_weights(adj, p, active=active)
-            if comp is None:
-                flat = mix_flat_sparse(self_w, nbr_w, adj, flat,
-                                       impl=cfg.mix_impl)
+            if rule == "trimmed":
+                p_un, w_un = sparse_eq4_unnormalized(adj, p,
+                                                     active=active)
+                flat = _robust.trimmed_mix_sparse(p_un, w_un, adj, flat,
+                                                  recv, cfg.trim_frac)
             else:
-                flat = _compress.sparse_mix_compressed(
-                    comp, self_w, nbr_w, adj, flat, payload, dec,
-                    impl=cfg.mix_impl)
+                self_w, nbr_w = sparse_mixing_weights(adj, p,
+                                                      active=active)
+                if rule == "clipped":
+                    safe = jnp.clip(adj, 0, N - 1)
+                    gamma = _robust.clip_factors_sparse(
+                        recv[safe], flat, prev_flat, cfg.clip_mult)
+                    self_w, nbr_w = _robust.clipped_sparse_weights(
+                        self_w, nbr_w, gamma)
+                if comp is None:
+                    flat = mix_flat_sparse(self_w, nbr_w, adj, flat,
+                                           peers=wire if fr else None,
+                                           impl=cfg.mix_impl)
+                else:
+                    flat = _compress.sparse_mix_compressed(
+                        comp, self_w, nbr_w, adj, flat, payload, dec,
+                        impl=cfg.mix_impl)
+        elif rule == "trimmed":
+            w_un = eq4_weights_unnormalized(adj, p, active=active)
+            flat = _robust.trimmed_mix_dense(w_un, flat, recv,
+                                             cfg.trim_frac)
         else:
             A = mixing_matrix(adj, p, active=active)
+            if rule == "clipped":
+                gamma = _robust.clip_factors(recv, flat, prev_flat,
+                                             cfg.clip_mult)
+                A = _robust.clipped_matrix(A, gamma)
             if comp is None:
-                flat = mix_flat(A, flat, impl=cfg.mix_impl)
+                if fr:
+                    diag = jnp.diagonal(A)
+                    A_off = A * (1.0 - jnp.eye(N, dtype=A.dtype))
+                    flat = mix_flat(A_off, wire, impl=cfg.mix_impl) \
+                        + diag[:, None] * flat
+                else:
+                    flat = mix_flat(A, flat, impl=cfg.mix_impl)
             else:
                 flat = _compress.mix_compressed(comp, A, flat, payload,
                                                 dec, impl=cfg.mix_impl)
@@ -767,6 +940,9 @@ def abstract_round_state(engine: FLEngine, cfg: DPFLConfig) -> RoundState:
         aux["k_comp"] = key_t
         if _compress.uses_ef(comp):
             aux["ef"] = sds((N, P_))
+    if cfg.adversary is not None:
+        aux["adv"] = {"sched": sds((cfg.rounds, N), jnp.bool_),
+                      "key": key_t}
     return RoundState(
         t=sds((), jnp.int32), key=key_t, flat=sds((N, P_)),
         best_val=sds((N,)), best_flat=sds((N, P_)),

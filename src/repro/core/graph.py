@@ -42,6 +42,22 @@ from ..sharding.compat import optimization_barrier as _barrier
 # ------------------------------------------------------------------ mixing
 
 
+def eq4_weights_unnormalized(adj, p, active=None):
+    """The Eq.-4 member weights BEFORE row normalization: (N, N) fp32
+    with entry ``p_i`` where k receives from i (diagonal forced on,
+    participation-masked), 0 elsewhere. `mixing_matrix` is exactly this
+    divided by its row sums; the robust rules (`repro.fl.robust`) need
+    the unnormalized form because trimming changes which members the
+    normalization runs over (DESIGN.md §15)."""
+    adj = jnp.asarray(adj, jnp.float32)
+    n = adj.shape[0]
+    if active is not None:
+        act = jnp.asarray(active, jnp.float32)
+        adj = adj * act[:, None] * act[None, :]
+    adj = jnp.maximum(adj, jnp.eye(n, dtype=adj.dtype))
+    return adj * p[None, :]
+
+
 def mixing_matrix(adj, p, active=None):
     """adj: (N, N) bool/float, adj[k, i]=1 iff k receives from i (diagonal
     forced on: every client 'collaborates' with itself). p: (N,) weights.
@@ -55,13 +71,7 @@ def mixing_matrix(adj, p, active=None):
     multiplying by 1.0 is exact) reproduces the full-participation matrix
     bitwise.
     """
-    adj = jnp.asarray(adj, jnp.float32)
-    n = adj.shape[0]
-    if active is not None:
-        act = jnp.asarray(active, jnp.float32)
-        adj = adj * act[:, None] * act[None, :]
-    adj = jnp.maximum(adj, jnp.eye(n, dtype=adj.dtype))
-    w = adj * p[None, :]
+    w = eq4_weights_unnormalized(adj, p, active=active)
     return w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-12)
 
 
@@ -476,6 +486,17 @@ def sparse_mixing_weights(idx, p, active=None):
     and renormalizes (DESIGN.md §9): an absent client's row is e_k. As in
     the dense path, ``active=None`` and an all-ones mask are bitwise
     identical (multiplying by 1.0 is exact)."""
+    p, w = sparse_eq4_unnormalized(idx, p, active=active)
+    denom = jnp.maximum(p + w.sum(axis=1), 1e-12)
+    return p / denom, w / denom[:, None]
+
+
+def sparse_eq4_unnormalized(idx, p, active=None):
+    """Neighbor-list counterpart of `eq4_weights_unnormalized`: the
+    Eq.-4 member weights before row normalization. Returns ``(p, w)`` —
+    (N,) fp32 self weights and (N, B) fp32 peer weights (0 at empty or
+    participation-masked slots); `sparse_mixing_weights` is exactly this
+    pair divided by ``max(p + w.sum(1), 1e-12)``."""
     N, _ = idx.shape
     p = jnp.asarray(p, jnp.float32)
     w = (idx >= 0).astype(jnp.float32)
@@ -484,8 +505,7 @@ def sparse_mixing_weights(idx, p, active=None):
         act = jnp.asarray(active, jnp.float32)
         w = w * act[:, None] * act[safe]
     w = w * p[safe]
-    denom = jnp.maximum(p + w.sum(axis=1), 1e-12)
-    return p / denom, w / denom[:, None]
+    return p, w
 
 
 @exchange_site(charges="caller")

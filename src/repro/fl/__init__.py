@@ -3,7 +3,9 @@ from .round_engine import (RoundState, init_round_state, make_round_step,
                            run_rounds)
 from .baselines import BASELINES, run_baseline
 from .compress import CompressionConfig
+from .adversary import ATTACKS, AdversaryConfig
+from .robust import MIX_RULES
 
 __all__ = ["FLEngine", "BASELINES", "run_baseline", "CompressionConfig",
            "RoundState", "init_round_state", "make_round_step",
-           "run_rounds"]
+           "run_rounds", "ATTACKS", "AdversaryConfig", "MIX_RULES"]

@@ -167,21 +167,31 @@ class FLEngine:
                           self._device_data(self.data.test_y))
         train_x, train_y = self.train_data
 
-        def train_fn(stacked, key, epochs):
+        def train_fn_with_labels(stacked, key, epochs, ys):
             N = self.data.n_clients
             keys = jax.random.split(key, N)
             stacked = jax.tree.map(self.constrain_clients, stacked)
             return jax.vmap(
                 lambda p, x, y, k: one_client_epochs(p, x, y, k, epochs)
             )(stacked, self.constrain_clients(train_x),
-              self.constrain_clients(train_y),
+              self.constrain_clients(ys),
               self.constrain_clients(keys))
+
+        # label-parameterized variant for data-level attacks (DESIGN.md
+        # §15): same trace, with the (N, n_train) label table an argument
+        # instead of a closure constant
+        self.train_fn_with_labels = train_fn_with_labels
+
+        def train_fn(stacked, key, epochs):
+            return train_fn_with_labels(stacked, key, epochs, train_y)
 
         self.train_fn = train_fn
         # local_train(stacked, key, epochs) -> (stacked', (N,) mean loss):
         # `epochs` seeded epochs of minibatch SGD vmapped over clients
         # (stacked leaves (N, ...); per-client streams fold_in by row)
         self.local_train = jax.jit(train_fn, static_argnames=("epochs",))
+        self.local_train_with_labels = jax.jit(
+            train_fn_with_labels, static_argnames=("epochs",))
 
         def eval_split_fn(stacked, xs, ys):
             stacked = jax.tree.map(self.constrain_clients, stacked)

@@ -1,0 +1,184 @@
+"""Robust Eq.-4 mixing rules: trimmed-mean and update-norm clipping.
+
+Eq. 4's weighted average is a linear aggregation — a single poisoned
+peer row moves every downloader that selected it by an unbounded
+amount. These rules bound that influence (DESIGN.md §15):
+
+  * ``trimmed`` — coordinate-wise trimmed mean over the decoded peer
+    panel: per row and per coordinate, drop the ``floor(trim_frac * m)``
+    smallest and largest member values (m = members incl. self, capped
+    so at least one survives), then renormalize the surviving Eq.-4
+    weights. ``trim_frac=0`` reproduces the `mixing_matrix` /
+    `sparse_mixing_weights` rows BITWISE (the kept-mask multiply and the
+    row-sum use the same operand order — tested by hypothesis).
+  * ``clipped`` — per-peer update-norm clipping relative to self: peer
+    i's weight in row k is scaled by
+    ``gamma = min(1, tau_k / ||recv_i - flat_k||)`` with
+    ``tau_k = clip_mult * ||flat_k - prev_k||``; the freed mass moves to
+    the diagonal, so rows stay simplex-normalized by construction and
+    peers whose models sit within ``tau_k`` of self pass through
+    unscaled (idempotent bitwise — tested by hypothesis).
+
+``clipped`` only reweights the matrix / neighbor weights, so it reuses
+every existing mix kernel (dense matmul, sparse rotation, compressed)
+unchanged. ``trimmed`` is an order statistic, not a matmul — it mixes
+through plain jnp reductions over an explicit (N, M, P) value panel
+(dense M = N; sparse M = B + 1 with self in slot 0), so the dense
+variant materializes the full panel and is meant for moderate N; at
+production N use the sparse representation (M = B + 1).
+
+Both consume the PEER-VISIBLE table (decoded payloads under
+compression, the wire table under free-riding) while the self term
+reads the exact local row — the same decode-order contract as
+`mix_flat_sparse` / `mix_compressed` (DESIGN.md §11).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..analysis.registry import exchange_site
+
+__all__ = ["MIX_RULES", "update_norms", "clip_factors", "clipped_matrix",
+           "clip_factors_sparse", "clipped_sparse_weights",
+           "trimmed_weights", "trimmed_weights_sparse",
+           "trimmed_panel_dense", "trimmed_panel_sparse",
+           "trimmed_mix_dense", "trimmed_mix_sparse"]
+
+MIX_RULES = ("weighted", "trimmed", "clipped")
+
+
+# ------------------------------------------------------------- clipping
+def update_norms(flat, prev):
+    """(N,) L2 norms of this round's local updates ``flat - prev``."""
+    d = flat - prev
+    return jnp.sqrt(jnp.sum(d * d, axis=1))
+
+
+def clip_factors(recv, flat, prev, clip_mult):
+    """(N, N) clip factors gamma[k, i] in (0, 1] for the dense panel:
+    1.0 where peer i's received model sits within
+    ``tau_k = clip_mult * ||flat_k - prev_k||`` of client k's own model,
+    ``tau_k / ||recv_i - flat_k||`` beyond. ``tau_k = 0`` (no local
+    update, e.g. an absent attacker's held row) clips every non-equal
+    peer to weight 0 — the row degrades to self-only, never to junk."""
+    d2 = (jnp.sum(flat * flat, axis=1)[:, None]
+          + jnp.sum(recv * recv, axis=1)[None, :]
+          - 2.0 * (flat @ recv.T))
+    d = jnp.sqrt(jnp.maximum(d2, 0.0))
+    tau = jnp.float32(clip_mult) * update_norms(flat, prev)
+    return jnp.where(d <= tau[:, None], jnp.float32(1.0),
+                     tau[:, None] / jnp.maximum(d, 1e-30))
+
+
+def clipped_matrix(A, gamma):
+    """Rescale the off-diagonal entries of a row-stochastic Eq.-4 matrix
+    by ``gamma`` and move the freed mass onto the diagonal. Rows stay on
+    the simplex by construction (off' <= off <= 1 - A_kk so the new
+    diagonal is >= A_kk >= 0); ``gamma == 1`` everywhere reproduces the
+    clipped matrix bitwise (idempotence)."""
+    n = A.shape[0]
+    eye = jnp.eye(n, dtype=A.dtype)
+    off = A * (1.0 - eye) * gamma
+    return off + (1.0 - off.sum(axis=1, keepdims=True)) * eye
+
+
+def clip_factors_sparse(recv_nbr, flat, prev, clip_mult):
+    """(N, B) clip factors for a gathered neighbor panel ``recv_nbr``
+    ((N, B, P), row k's B peer models). Same rule as `clip_factors`;
+    factors at empty (-1) slots are finite junk the zero neighbor
+    weights annihilate."""
+    diff = recv_nbr - flat[:, None, :]
+    d = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+    tau = jnp.float32(clip_mult) * update_norms(flat, prev)
+    return jnp.where(d <= tau[:, None], jnp.float32(1.0),
+                     tau[:, None] / jnp.maximum(d, 1e-30))
+
+
+def clipped_sparse_weights(self_w, nbr_w, gamma):
+    """Neighbor-list counterpart of `clipped_matrix`: scale the
+    NORMALIZED neighbor weights by ``gamma`` and move the freed mass to
+    the self weight. Returns ``(self_w', nbr_w')`` with
+    ``self_w' + nbr_w'.sum(1) = 1`` preserved."""
+    nw = nbr_w * gamma
+    return 1.0 - jnp.sum(nw, axis=1), nw
+
+
+# ------------------------------------------------------------- trimming
+def _trim_keep(w, vals, trim_frac):
+    """(N, M, P) bool keep-mask of the coordinate-wise trimmed mean:
+    per row, ``q = min(floor(trim_frac * m), (m - 1) // 2)`` members are
+    dropped from each tail (m = members, ``w > 0``). Ranks come from a
+    double argsort of the member-masked values (non-members pushed to
+    +inf, so members occupy ranks 0..m-1 and the upper cut needs no
+    special-casing)."""
+    member = w > 0.0
+    m = member.sum(axis=1)
+    q = jnp.minimum(
+        jnp.floor(jnp.float32(trim_frac) * m.astype(jnp.float32))
+        .astype(jnp.int32), (m - 1) // 2)
+    ranked = jnp.where(member[:, :, None], vals, jnp.inf)
+    rank = jnp.argsort(jnp.argsort(ranked, axis=1), axis=1)
+    return (member[:, :, None] & (rank >= q[:, None, None])
+            & (rank < (m - q)[:, None, None]))
+
+
+def trimmed_weights(w, vals, trim_frac):
+    """(N, M, P) per-coordinate mixing weights of the trimmed mean over
+    a dense member panel. ``w``: (N, M) unnormalized Eq.-4 weights
+    (`eq4_weights_unnormalized`); ``vals``: (N, M, P) member values.
+    ``trim_frac=0`` keeps every member and reproduces `mixing_matrix`
+    rows bitwise (same multiply-by-{0,1} masking and row-sum order)."""
+    keep = _trim_keep(w, vals, trim_frac)
+    wk = w[:, :, None] * keep
+    return wk / jnp.maximum(wk.sum(axis=1, keepdims=True), 1e-12)
+
+
+def trimmed_weights_sparse(p_self, w_nbr, vals, trim_frac):
+    """(N, B+1, P) trimmed-mean weights over the sparse panel layout
+    (self in slot 0, then the B neighbor slots). ``p_self``/``w_nbr``
+    are the unnormalized weights (`sparse_eq4_unnormalized`); the
+    normalizer keeps `sparse_mixing_weights`' operand order
+    (self + sum-over-slots) so ``trim_frac=0`` reproduces its rows
+    bitwise."""
+    w = jnp.concatenate([p_self[:, None], w_nbr], axis=1)
+    keep = _trim_keep(w, vals, trim_frac)
+    wk = w[:, :, None] * keep
+    denom = jnp.maximum(wk[:, 0] + wk[:, 1:].sum(axis=1), 1e-12)
+    return wk / denom[:, None, :]
+
+
+def trimmed_panel_dense(flat, recv):
+    """(N, N, P) member-value panel: row k sees peer i's received model
+    at slot i, its own exact local row on the diagonal (the self term
+    never goes through a codec — DESIGN.md §11)."""
+    n = flat.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    return jnp.where(eye[:, :, None], flat[:, None, :], recv[None, :, :])
+
+
+def trimmed_panel_sparse(idx, flat, peers):
+    """(N, B+1, P) member-value panel in neighbor-list form: the exact
+    self row in slot 0, then the gathered peer rows (junk at -1 slots —
+    their zero weights exclude them from membership)."""
+    n = flat.shape[0]
+    safe = jnp.clip(idx, 0, n - 1)
+    return jnp.concatenate([flat[:, None, :], peers[safe]], axis=1)
+
+
+@exchange_site(charges="caller")
+def trimmed_mix_dense(w, flat, recv, trim_frac):
+    """Trimmed-mean Eq.-4 mix over the dense panel. ``w``: (N, N)
+    unnormalized weights; ``recv``: the peer-visible (N, P) table.
+    Materializes the (N, N, P) panel — moderate-N path."""
+    vals = trimmed_panel_dense(flat, recv)
+    tw = trimmed_weights(w, vals, trim_frac)
+    return jnp.sum(tw * vals, axis=1)
+
+
+@exchange_site(charges="caller")
+def trimmed_mix_sparse(p_self, w_nbr, idx, flat, peers, trim_frac):
+    """Trimmed-mean Eq.-4 mix in neighbor-list form: gathers the <= B
+    selected peer rows (O(N·B·P) panel) and trims per coordinate."""
+    vals = trimmed_panel_sparse(idx, flat, peers)
+    tw = trimmed_weights_sparse(p_self, w_nbr, vals, trim_frac)
+    return jnp.sum(tw * vals, axis=1)

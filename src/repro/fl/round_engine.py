@@ -28,6 +28,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import inspect
 import warnings
 from typing import Any, Callable, Optional
 
@@ -196,9 +197,21 @@ def _touches_exchange_site(fn, depth: int = 2) -> bool:
     return any(_touches_exchange_site(c, depth - 1) for c in cands)
 
 
+def _accepts(fn, name: str) -> bool:
+    """True when ``fn``'s signature has a parameter called ``name``
+    (aggregates optionally take ``prev``, local-train hooks optionally
+    take ``aux``/``t`` — arity-detected so every existing callable keeps
+    its old calling convention)."""
+    try:
+        return name in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+
+
 def make_round_step(engine, *, tau: int,
                     aggregate: Optional[Callable] = None,
                     local_train: Optional[Callable] = None,
+                    post_train: Optional[Callable] = None,
                     eval_flat: Optional[Callable] = None,
                     hist_len: int = 0,
                     aux_specs=None,
@@ -209,11 +222,21 @@ def make_round_step(engine, *, tau: int,
     tau:         local epochs per round (static)
     aggregate:   (flat, aux, t) -> (flat, aux) — the traced communication
                  step (mixing matmul, graph refresh, comm accounting).
-                 Default: no communication (local-only).
-    local_train: override of engine.train_fn(stacked, key, epochs)
-    eval_flat:   optional transform (flat, aux) -> flat of the aggregated
-                 params producing the evaluated/tracked model (APFL
-                 mixtures, Ditto personal models)
+                 Default: no communication (local-only). An aggregate
+                 whose signature has a ``prev`` parameter additionally
+                 receives the round-start panel (``prev=state.flat``) —
+                 the clipped mix rule's reference point (DESIGN.md §15).
+    local_train: override of engine.train_fn(stacked, key, epochs). A
+                 hook whose signature has an ``aux`` parameter is called
+                 as ``local_train(stacked, key, epochs, aux=, t=)`` — the
+                 data-level attack hook reads its per-round schedule from
+                 ``aux["adv"]`` (DESIGN.md §15).
+    post_train:  optional (flat, prev, aux, t) -> flat transform of the
+                 trained panel, applied AFTER the participation hold and
+                 BEFORE the aggregate's barrier — model poisoning
+                 (DESIGN.md §15) rewrites the attacker's own rows here,
+                 so an absent attacker still holds its round-start params
+                 and every mix path sees the poisoned panel.
     hist_len:    >0 writes val accuracy into state.val_hist[t % hist_len]
     aux_specs:   pytree of `PartitionSpec` for state.aux when the engine
                  carries a mesh (default: aux replicates)
@@ -252,25 +275,37 @@ def make_round_step(engine, *, tau: int,
             stacklevel=2)
     agg = aggregate if aggregate is not None else \
         (lambda flat, aux, t: (flat, aux))
+    lt_takes_aux = _accepts(lt, "aux")
+    agg_takes_prev = _accepts(agg, "prev")
 
     def round_step(state: RoundState) -> RoundState:
         t = state.t
         stacked = engine.unflatten(state.flat)
-        stacked, _ = lt(stacked, jax.random.fold_in(state.key, t),
-                        epochs=tau)
+        kt = jax.random.fold_in(state.key, t)
+        if lt_takes_aux:
+            stacked, _ = lt(stacked, kt, epochs=tau, aux=state.aux, t=t)
+        else:
+            stacked, _ = lt(stacked, kt, epochs=tau)
         flat = engine.flatten(stacked)
         if participation_key is not None:
             # absent clients hold their round-start params; the schedule
             # is client-sharded, so the select stays shard-local
             m = state.aux[participation_key][t]
             flat = jnp.where(m[:, None], flat, state.flat)
+        if post_train is not None:
+            # after the hold: an absent attacker's row is its round-start
+            # params either way, so poisoning composes with participation
+            flat = post_train(flat, state.flat, state.aux, t)
         # barriers: keep the train -> aggregate -> eval stages fusion-
         # isolated so the fused round tracks the staged host loop (and the
         # mesh-sharded build tracks the single-device one) as closely as
         # XLA allows — cross-stage fusion reorders fp accumulation, which
         # the greedy graph decisions amplify (DESIGN.md §8)
         flat = jax.lax.optimization_barrier(flat)
-        flat, aux = agg(flat, state.aux, t)
+        if agg_takes_prev:
+            flat, aux = agg(flat, state.aux, t, prev=state.flat)
+        else:
+            flat, aux = agg(flat, state.aux, t)
         flat = jax.lax.optimization_barrier(flat)
         ev = eval_flat(flat, aux) if eval_flat is not None else flat
         val_acc, _ = engine.eval_val_fn(engine.unflatten(ev))

@@ -34,8 +34,10 @@ from ..core.dpfl import (DPFLConfig, abstract_round_state,  # noqa: E402
                          dpfl_round_step)
 from ..data import (ParticipationConfig,  # noqa: E402
                     make_federated_classification)
+from ..fl.adversary import ATTACKS, AdversaryConfig  # noqa: E402
 from ..fl.compress import CompressionConfig  # noqa: E402
 from ..fl.engine import FLEngine  # noqa: E402
+from ..fl.robust import MIX_RULES  # noqa: E402
 from ..models.classifier import PaperCNN  # noqa: E402
 from ..roofline import analyze_compiled  # noqa: E402
 from .mesh import make_client_mesh  # noqa: E402
@@ -47,7 +49,10 @@ def build_engine_step(n_clients: int, n_train: int, n_val: int, tau: int,
                       avail_model: str = "bernoulli",
                       compress: str = "none", topk_frac: float = 0.1,
                       quant_bits: int = 8, graph_repr: str = "dense",
-                      random_graph: bool = False):
+                      random_graph: bool = False,
+                      adversary: str = "none",
+                      adversary_fraction: float = 0.4,
+                      mix_rule: str = "weighted"):
     """Client-sharded FLEngine + the cached DPFL round_step + an abstract
     RoundState, ready to lower (plus the engine and config, so callers
     can also RUN the engine loop — ``--run-rounds``). ``participation < 1`` lowers the
@@ -55,7 +60,10 @@ def build_engine_step(n_clients: int, n_train: int, n_val: int, tau: int,
     mixing/refresh, realized-comm counters — DESIGN.md §9) instead of the
     schedule-free full-participation program; ``compress`` lowers the
     codec-compressed exchange (decoded probes, compressed mix, EF
-    residuals in aux — DESIGN.md §11)."""
+    residuals in aux — DESIGN.md §11); ``adversary != "none"`` lowers
+    the adversary-aware step (attack schedule in aux, in-trace
+    poisoning) and ``mix_rule`` selects the robust Eq.-4 variant
+    (DESIGN.md §15)."""
     mesh = make_client_mesh(devices, pods=pods)
     c = CNN_CONFIG
     data = make_federated_classification(
@@ -68,10 +76,13 @@ def build_engine_step(n_clients: int, n_train: int, n_val: int, tau: int,
         rate=participation, model=avail_model)
     comp = None if compress == "none" else CompressionConfig(
         codec=compress, topk_frac=topk_frac, quant_bits=quant_bits)
+    adv = None if adversary == "none" else AdversaryConfig(
+        attack=adversary, fraction=adversary_fraction)
     cfg = DPFLConfig(rounds=1, tau_train=tau, budget=budget,
                      track_history=False, participation=part,
                      compression=comp, graph_repr=graph_repr,
-                     random_graph=random_graph)
+                     random_graph=random_graph, adversary=adv,
+                     mix_rule=mix_rule)
     return dpfl_round_step(engine, cfg), abstract_round_state(engine, cfg), \
         mesh, engine, cfg
 
@@ -104,6 +115,17 @@ def main():
                     help="collaboration-graph layout: dense (N, N) masks "
                          "or budget-sparse (N, B) neighbor lists "
                          "(DESIGN.md §12)")
+    ap.add_argument("--adversary", default="none",
+                    choices=["none", *ATTACKS],
+                    help="device-resident attack; lowers the adversary-"
+                         "aware round_step (schedule in aux, in-trace "
+                         "poisoning — DESIGN.md §15)")
+    ap.add_argument("--adversary-fraction", type=float, default=0.4,
+                    help="fraction of clients that are malicious")
+    ap.add_argument("--mix-rule", default="weighted", choices=MIX_RULES,
+                    help="Eq.-4 aggregation rule: weighted (paper), "
+                         "trimmed (coordinate-wise trimmed mean) or "
+                         "clipped (per-peer update-norm clipping)")
     ap.add_argument("--random-graph", action="store_true",
                     help="Fig.-3 ablation: fixed random C_k of size "
                          "budget instead of the greedy graph — the only "
@@ -134,7 +156,8 @@ def main():
         args.clients, args.n_train, args.n_val, args.tau, args.budget,
         args.pods, args.devices, args.participation, args.avail_model,
         args.compress, args.topk_frac, args.quant_bits, args.graph_repr,
-        args.random_graph)
+        args.random_graph, args.adversary, args.adversary_fraction,
+        args.mix_rule)
     lowered = step.lower(state)
     compiled = lowered.compile()
     print("memory_analysis:", compiled.memory_analysis())
@@ -143,6 +166,7 @@ def main():
            "devices": args.devices, "pods": args.pods,
            "participation": args.participation,
            "compress": args.compress, "graph_repr": args.graph_repr,
+           "adversary": args.adversary, "mix_rule": args.mix_rule,
            "status": "ok"}
     rec.update(analyze_compiled(compiled, mesh.devices.size))
     rec["compile_s"] = time.time() - t0

@@ -1,0 +1,296 @@
+"""The adversarial-client subsystem (DESIGN.md §15): seeded attack
+schedules, the fraction=0.0 bitwise contract, engine-vs-reference
+equivalence over the attack × mix_rule matrix, free-rider
+zero-gradient-information, and the Fig.-4 segregation helper."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdversaryConfig, CompressionConfig, DPFLConfig,
+                        ParticipationConfig, dpfl_round_step, run_dpfl,
+                        run_dpfl_reference)
+from repro.data import make_federated_classification
+from repro.fl.adversary import (ATTACKS, attack_schedule, edge_rates,
+                                label_permutation, malicious_mask,
+                                n_malicious, segregation_history)
+from repro.fl.engine import FLEngine
+from repro.fl.robust import MIX_RULES
+from repro.fl.round_engine import init_round_state, run_rounds
+from repro.models.classifier import MLP
+
+
+def _toy_data(seed=5):
+    return make_federated_classification(
+        seed=seed, n_clients=6, n_clusters=2, partition="pathological",
+        classes_per_client=3, feature_dim=8, n_train=16, n_val=16,
+        n_test=16, noise=2.0, assign_level="cluster")
+
+
+@pytest.fixture(scope="module")
+def small_setting():
+    return FLEngine(MLP(8, 16, 10), _toy_data(), lr=0.05, batch_size=8)
+
+
+# ----------------------------------------------------- schedule properties
+def test_schedule_seeded_determinism():
+    cfg = AdversaryConfig(attack="grad_scale", fraction=0.4, seed=7,
+                          round_prob=0.5)
+    a = attack_schedule(cfg, 12, 10)
+    b = attack_schedule(cfg, 12, 10)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(malicious_mask(cfg, 10),
+                                  malicious_mask(cfg, 10))
+    # a different seed moves the malicious set (10 choose 4 is large
+    # enough that a collision would be a seeding bug)
+    other = dataclasses.replace(cfg, seed=8)
+    assert not np.array_equal(malicious_mask(cfg, 10),
+                              malicious_mask(other, 10))
+
+
+@pytest.mark.parametrize("fraction,n,expect", [
+    (0.0, 10, 0), (0.4, 10, 4), (0.34, 6, 2), (1.0, 5, 5), (0.25, 10, 2)])
+def test_malicious_count_exact(fraction, n, expect):
+    cfg = AdversaryConfig(attack="sign_flip", fraction=fraction)
+    mask = malicious_mask(cfg, n)
+    assert n_malicious(cfg, n) == expect
+    assert int(mask.sum()) == expect
+    # benign/malicious partition the clients: disjoint by construction
+    assert int(mask.sum()) + int((~mask).sum()) == n
+
+
+def test_schedule_support_and_round_prob():
+    cfg = AdversaryConfig(attack="free_rider", fraction=0.5, seed=3,
+                          round_prob=0.6)
+    mask = malicious_mask(cfg, 8)
+    sched = attack_schedule(cfg, 50, 8)
+    # rows only ever activate malicious clients
+    assert not np.any(sched[:, ~mask])
+    # Bernoulli activity: strictly between never and always (50 rounds
+    # x 4 attackers at p=0.6 makes either extreme astronomically rare)
+    on = sched[:, mask]
+    assert 0 < on.sum() < on.size
+    # round_prob=1 activates the full malicious set every round
+    full = attack_schedule(dataclasses.replace(cfg, round_prob=1.0), 5, 8)
+    np.testing.assert_array_equal(full, np.tile(mask, (5, 1)))
+
+
+def test_label_permutation_is_derangement():
+    for seed in range(5):
+        perm = label_permutation(AdversaryConfig(seed=seed), 10)
+        assert sorted(perm) == list(range(10))
+        assert not np.any(perm == np.arange(10))
+
+
+def test_adversary_config_validation():
+    with pytest.raises(ValueError):
+        AdversaryConfig(attack="nope")
+    with pytest.raises(ValueError):
+        AdversaryConfig(fraction=1.5)
+    with pytest.raises(ValueError):
+        AdversaryConfig(round_prob=-0.1)
+    # hashable: it is part of the round_step cache key
+    assert hash(AdversaryConfig(attack="grad_scale", fraction=0.4))
+
+
+# ------------------------------------------------------ segregation helper
+def test_edge_rates_matches_inline_fig4_formula():
+    rng = np.random.default_rng(0)
+    adj = rng.random((10, 10)) < 0.4
+    np.fill_diagonal(adj, True)
+    mal = np.zeros(10, bool)
+    mal[[2, 5, 7, 9]] = True
+    ben = ~mal
+    cross, within = edge_rates(adj, mal)
+    a = adj.astype(float)
+    nb = int(ben.sum())
+    assert cross == pytest.approx(a[np.ix_(ben, mal)].mean())
+    assert within == pytest.approx(
+        (a[np.ix_(ben, ben)].sum() - nb) / (nb * (nb - 1)))
+    hist = segregation_history([adj, adj], mal)
+    assert hist["benign_to_malicious"] == [cross, cross]
+    assert hist["benign_to_benign"] == [within, within]
+    # degenerate sets are zero-division-safe
+    assert edge_rates(adj, np.zeros(10, bool))[0] == 0.0
+    assert edge_rates(adj, np.ones(10, bool)) == (0.0, 0.0)
+
+
+# ------------------------------------------------- fraction=0.0 contract
+@pytest.mark.parametrize("attack", ATTACKS)
+def test_fraction_zero_bitwise_identical(small_setting, attack):
+    """The adversary-aware compiled round_step with fraction=0.0 must be
+    BITWISE identical to the adversary-free step on one device — the
+    availability rate=1.0 contract, mirrored (ISSUE acceptance)."""
+    eng = small_setting
+    kw = dict(rounds=3, tau_init=2, tau_train=1, budget=3, seed=0)
+    base = run_dpfl(eng, DPFLConfig(**kw))
+    adv = run_dpfl(eng, DPFLConfig(
+        **kw, adversary=AdversaryConfig(attack=attack, fraction=0.0,
+                                        seed=5)))
+    assert adv.comm_downloads == base.comm_downloads
+    assert adv.comm_bytes == base.comm_bytes
+    np.testing.assert_array_equal(adv.test_acc, base.test_acc)
+    np.testing.assert_array_equal(adv.best_flat, base.best_flat)
+    for a, b in zip(adv.graph_history, base.graph_history):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(adv.malicious, np.zeros(6, bool))
+
+
+def test_fraction_zero_bitwise_identical_sparse(small_setting):
+    eng = small_setting
+    kw = dict(rounds=3, tau_init=2, tau_train=1, budget=3, seed=0,
+              graph_repr="sparse")
+    base = run_dpfl(eng, DPFLConfig(**kw))
+    adv = run_dpfl(eng, DPFLConfig(
+        **kw, adversary=AdversaryConfig(attack="free_rider",
+                                        fraction=0.0)))
+    np.testing.assert_array_equal(adv.best_flat, base.best_flat)
+    for a, b in zip(adv.graph_history, base.graph_history):
+        np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------- engine vs reference, full matrix
+@pytest.mark.slow
+@pytest.mark.parametrize("rule", MIX_RULES)
+@pytest.mark.parametrize("attack", ATTACKS)
+def test_engine_matches_reference_attack_matrix(small_setting, attack,
+                                                rule):
+    """Every attack × mix_rule cell: the compiled engine reproduces the
+    host reference loop — comm counters and comm_bytes exactly, graph
+    decisions bitwise, accuracies to fp tolerance."""
+    eng = small_setting
+    adv = AdversaryConfig(attack=attack, fraction=0.34, seed=3,
+                          scale=4.0, noise_scale=0.5)
+    cfg = DPFLConfig(rounds=2, tau_init=1, tau_train=1, budget=3, seed=0,
+                     adversary=adv, mix_rule=rule, trim_frac=0.25,
+                     clip_mult=1.5)
+    a = run_dpfl(eng, cfg)
+    b = run_dpfl_reference(eng, cfg)
+    assert a.comm_downloads == b.comm_downloads
+    assert a.comm_bytes == b.comm_bytes
+    for x, y in zip(a.graph_history, b.graph_history):
+        np.testing.assert_array_equal(x, y)
+    np.testing.assert_allclose(a.test_acc, b.test_acc, atol=1e-6)
+    np.testing.assert_array_equal(a.malicious, b.malicious)
+    assert int(np.sum(a.malicious)) == 2
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("rule", MIX_RULES)
+def test_engine_matches_reference_sparse(small_setting, rule):
+    eng = small_setting
+    adv = AdversaryConfig(attack="free_rider", fraction=0.34, seed=3,
+                          noise_scale=0.5)
+    cfg = DPFLConfig(rounds=2, tau_init=1, tau_train=1, budget=3, seed=0,
+                     graph_repr="sparse", adversary=adv, mix_rule=rule,
+                     trim_frac=0.25, clip_mult=1.5)
+    a = run_dpfl(eng, cfg)
+    b = run_dpfl_reference(eng, cfg)
+    assert a.comm_downloads == b.comm_downloads
+    for x, y in zip(a.graph_history, b.graph_history):
+        np.testing.assert_array_equal(x, y)
+    np.testing.assert_allclose(a.test_acc, b.test_acc, atol=1e-6)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("rule", MIX_RULES)
+def test_engine_matches_reference_compressed(small_setting, rule):
+    """Robust mixing composes with the lossy codec path: the rules
+    consume DECODED peer panels (DESIGN.md §15 decode order)."""
+    eng = small_setting
+    adv = AdversaryConfig(attack="grad_scale", fraction=0.34, seed=3,
+                          scale=4.0)
+    cfg = DPFLConfig(rounds=2, tau_init=1, tau_train=1, budget=3, seed=0,
+                     adversary=adv, mix_rule=rule, trim_frac=0.25,
+                     compression=CompressionConfig(codec="topk",
+                                                   topk_frac=0.3))
+    a = run_dpfl(eng, cfg)
+    b = run_dpfl_reference(eng, cfg)
+    assert a.comm_downloads == b.comm_downloads
+    assert a.comm_bytes == b.comm_bytes
+    np.testing.assert_allclose(a.test_acc, b.test_acc, atol=1e-6)
+
+
+@pytest.mark.slow
+def test_engine_matches_reference_with_participation(small_setting):
+    eng = small_setting
+    adv = AdversaryConfig(attack="sign_flip", fraction=0.34, seed=3)
+    cfg = DPFLConfig(rounds=3, tau_init=1, tau_train=1, budget=3, seed=0,
+                     participation=ParticipationConfig(rate=0.7, seed=1),
+                     adversary=adv, mix_rule="clipped", clip_mult=1.5)
+    a = run_dpfl(eng, cfg)
+    b = run_dpfl_reference(eng, cfg)
+    assert a.comm_downloads == b.comm_downloads
+    np.testing.assert_allclose(a.test_acc, b.test_acc, atol=1e-6)
+
+
+# ------------------------------------------- free-rider zero information
+def test_free_rider_upload_carries_zero_gradient_information():
+    """Run the compiled adversary-aware round_step from the SAME state on
+    two engines whose train labels differ ONLY on the malicious clients:
+    every output leaf must be bitwise identical — the free rider's local
+    training is discarded (post_train) and its upload is stale params
+    plus data-independent seeded noise, so nothing its gradients touch
+    can reach the exchange."""
+    adv = AdversaryConfig(attack="free_rider", fraction=0.34, seed=2,
+                          noise_scale=0.7)
+    mal = malicious_mask(adv, 6)
+    assert int(mal.sum()) == 2
+    data1 = _toy_data()
+    data2 = _toy_data()
+    rng = np.random.default_rng(0)
+    y2 = np.array(data2.train_y)
+    for k in np.nonzero(mal)[0]:
+        y2[k] = rng.permutation(y2[k])
+    data2 = dataclasses.replace(data2, train_y=y2)
+    assert not np.array_equal(data1.train_y, data2.train_y)
+
+    cfg = DPFLConfig(rounds=2, tau_init=1, tau_train=2, budget=3, seed=0,
+                     track_history=False, adversary=adv)
+    outs = []
+    for data in (data1, data2):
+        eng = FLEngine(MLP(8, 16, 10), data, lr=0.05, batch_size=8)
+        step = dpfl_round_step(eng, cfg)
+        n = data.n_clients
+        flat0 = eng.flatten(eng.init_clients(jax.random.PRNGKey(1)))
+        omega = jnp.ones((n, n), bool)
+        aux = {"adj": omega, "omega": omega,
+               "k_graph": jax.random.PRNGKey(2),
+               "comm": jnp.zeros((cfg.rounds,), jnp.int32),
+               "adv": {"sched": jnp.asarray(
+                           attack_schedule(adv, cfg.rounds, n)),
+                       "key": jax.random.PRNGKey(3)}}
+        state = init_round_state(flat0, jax.random.PRNGKey(4), aux=aux)
+        outs.append(run_rounds(step, state, cfg.rounds))
+    a, b = outs
+    np.testing.assert_array_equal(np.asarray(a.flat), np.asarray(b.flat))
+    np.testing.assert_array_equal(np.asarray(a.best_flat),
+                                  np.asarray(b.best_flat))
+    np.testing.assert_array_equal(np.asarray(a.aux["comm"]),
+                                  np.asarray(b.aux["comm"]))
+    np.testing.assert_array_equal(np.asarray(a.aux["adj"]),
+                                  np.asarray(b.aux["adj"]))
+
+
+def test_grad_scale_leaks_by_contrast(small_setting):
+    """Control for the zero-information test: with grad_scale (an attack
+    whose upload DOES depend on local training), changing the malicious
+    clients' labels must change the outcome — the bitwise equality above
+    is a property of free_rider, not of the harness."""
+    adv = AdversaryConfig(attack="grad_scale", fraction=0.34, seed=2,
+                          scale=4.0)
+    mal = malicious_mask(adv, 6)
+    data2 = _toy_data()
+    rng = np.random.default_rng(0)
+    y2 = np.array(data2.train_y)
+    for k in np.nonzero(mal)[0]:
+        y2[k] = rng.permutation(y2[k])
+    data2 = dataclasses.replace(data2, train_y=y2)
+    eng2 = FLEngine(MLP(8, 16, 10), data2, lr=0.05, batch_size=8)
+    cfg = DPFLConfig(rounds=2, tau_init=1, tau_train=2, budget=3, seed=0,
+                     adversary=adv)
+    a = run_dpfl(small_setting, cfg)
+    b = run_dpfl(eng2, cfg)
+    assert not np.array_equal(a.best_flat, b.best_flat)

@@ -98,6 +98,24 @@ def test_documented_flags_are_accepted():
     assert not failures, "\n".join(failures)
 
 
+def test_fl_dryrun_accepts_adversary_flags():
+    """The adversary surface (DESIGN.md §15) is reachable from the
+    dry-run CLI: `--adversary`, `--adversary-fraction` and `--mix-rule`
+    are accepted flags, whatever the docs currently fence."""
+    flags = _accepted_flags("repro.launch.fl_dryrun")
+    for f in ("--adversary", "--adversary-fraction", "--mix-rule"):
+        assert f in flags, sorted(flags)
+
+
+def test_bench_robustness_help_parses():
+    """`benchmarks.bench_robustness --help` exits 0 and exposes the
+    sweep axes the robustness CI job and the regression gate drive."""
+    flags = _accepted_flags("benchmarks.bench_robustness")
+    for f in ("--attacks", "--fractions", "--mix-rules", "--graph-reprs",
+              "--smoke", "--mesh", "--out"):
+        assert f in flags, sorted(flags)
+
+
 @pytest.mark.slow
 def test_quickstart_example_runs():
     """The README's first command actually runs (CI executes it at toy

@@ -1,0 +1,203 @@
+"""Property tests for the robust Eq.-4 mixing weights
+(`repro.fl.robust`, DESIGN.md §15): trimmed/clipped rows stay on the
+simplex under participation masks, trim fraction 0 reproduces the
+weighted rows BITWISE, and clipping is idempotent on already-small
+updates."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import (eq4_weights_unnormalized, mixing_matrix,
+                              sparse_eq4_unnormalized,
+                              sparse_mixing_weights)
+from repro.fl.robust import (clip_factors, clip_factors_sparse,
+                             clipped_matrix, clipped_sparse_weights,
+                             trimmed_panel_dense, trimmed_panel_sparse,
+                             trimmed_weights, trimmed_weights_sparse)
+
+
+def _setting(seed, n, with_active, p_dim=5):
+    rng = np.random.default_rng(seed)
+    adj = rng.random((n, n)) < 0.5
+    p = (rng.random(n) + 0.1).astype(np.float32)
+    p = p / p.sum()
+    active = None
+    if with_active:
+        active = rng.random(n) < 0.7
+    flat = rng.normal(size=(n, p_dim)).astype(np.float32)
+    recv = rng.normal(size=(n, p_dim)).astype(np.float32)
+    prev = rng.normal(size=(n, p_dim)).astype(np.float32)
+    return adj, p, active, flat, recv, prev
+
+
+def _nbr_lists(rng, n, b):
+    """(N, B) ascending neighbor lists, -1 pads, self excluded."""
+    idx = np.full((n, b), -1, np.int32)
+    for k in range(n):
+        others = np.setdiff1d(np.arange(n), [k])
+        m = rng.integers(0, min(b, n - 1), endpoint=True)
+        if m:
+            idx[k, :m] = np.sort(rng.choice(others, size=m, replace=False))
+    return idx
+
+
+# ----------------------------------------------------------- trimmed rows
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(2, 8),
+       trim=st.floats(0.0, 0.49), with_active=st.booleans())
+def test_trimmed_weights_simplex(seed, n, trim, with_active):
+    adj, p, active, flat, recv, _ = _setting(seed, n, with_active)
+    w = eq4_weights_unnormalized(jnp.asarray(adj), jnp.asarray(p),
+                                 active=active)
+    vals = trimmed_panel_dense(jnp.asarray(flat), jnp.asarray(recv))
+    tw = np.asarray(trimmed_weights(w, vals, trim))
+    assert np.all(tw >= 0)
+    np.testing.assert_allclose(tw.sum(axis=1), 1.0, atol=1e-5)
+    # an absent client's row is e_k per coordinate (self-only member)
+    if active is not None:
+        for k in np.nonzero(~active)[0]:
+            np.testing.assert_allclose(tw[k, k], 1.0, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(2, 8),
+       with_active=st.booleans())
+def test_trim_zero_reproduces_mixing_matrix_bitwise(seed, n, with_active):
+    adj, p, active, flat, recv, _ = _setting(seed, n, with_active)
+    w = eq4_weights_unnormalized(jnp.asarray(adj), jnp.asarray(p),
+                                 active=active)
+    vals = trimmed_panel_dense(jnp.asarray(flat), jnp.asarray(recv))
+    tw = np.asarray(trimmed_weights(w, vals, 0.0))
+    A = np.asarray(mixing_matrix(jnp.asarray(adj), jnp.asarray(p),
+                                 active=active))
+    np.testing.assert_array_equal(
+        tw, np.broadcast_to(A[:, :, None], tw.shape))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(2, 8),
+       b=st.integers(1, 4), trim=st.floats(0.0, 0.49),
+       with_active=st.booleans())
+def test_trimmed_sparse_weights_simplex_and_trim_zero(seed, n, b, trim,
+                                                      with_active):
+    rng = np.random.default_rng(seed)
+    idx = _nbr_lists(rng, n, b)
+    p = (rng.random(n) + 0.1).astype(np.float32)
+    active = (rng.random(n) < 0.7) if with_active else None
+    flat = rng.normal(size=(n, 5)).astype(np.float32)
+    peers = rng.normal(size=(n, 5)).astype(np.float32)
+    p_un, w_un = sparse_eq4_unnormalized(jnp.asarray(idx),
+                                         jnp.asarray(p), active=active)
+    vals = trimmed_panel_sparse(jnp.asarray(idx), jnp.asarray(flat),
+                                jnp.asarray(peers))
+    tw = np.asarray(trimmed_weights_sparse(p_un, w_un, vals, trim))
+    assert np.all(tw >= 0)
+    np.testing.assert_allclose(tw.sum(axis=1), 1.0, atol=1e-5)
+    # empty (-1) slots never receive weight
+    np.testing.assert_array_equal(tw[:, 1:][idx < 0], 0.0)
+    if trim == 0.0:
+        self_w, nbr_w = sparse_mixing_weights(jnp.asarray(idx),
+                                              jnp.asarray(p),
+                                              active=active)
+        np.testing.assert_array_equal(
+            tw[:, 0], np.broadcast_to(np.asarray(self_w)[:, None],
+                                      tw[:, 0].shape))
+        np.testing.assert_array_equal(
+            tw[:, 1:], np.broadcast_to(np.asarray(nbr_w)[:, :, None],
+                                       tw[:, 1:].shape))
+
+
+def test_trimmed_actually_trims_extremes():
+    """Sanity anchor (not a property): with one wildly poisoned peer and
+    enough members, the trimmed mean drops it per coordinate."""
+    n = 5
+    adj = np.ones((n, n), bool)
+    p = np.full(n, 1.0 / n, np.float32)
+    flat = np.zeros((n, 3), np.float32)
+    recv = np.zeros((n, 3), np.float32)
+    recv[0] = 1e6                    # poisoned upload
+    w = eq4_weights_unnormalized(jnp.asarray(adj), jnp.asarray(p))
+    vals = trimmed_panel_dense(jnp.asarray(flat), jnp.asarray(recv))
+    mixed = np.asarray(jnp.sum(trimmed_weights(w, vals, 0.25) * vals,
+                               axis=1))
+    # every benign row excludes the 1e6 outlier entirely
+    assert np.all(np.abs(mixed[1:]) < 1e-3)
+    # the weighted mean, by contrast, is dragged far off
+    A = np.asarray(mixing_matrix(jnp.asarray(adj), jnp.asarray(p)))
+    assert np.all((A @ recv)[1:, 0] > 1e4)
+
+
+# ----------------------------------------------------------- clipped rows
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(2, 8),
+       clip_mult=st.floats(0.1, 3.0), with_active=st.booleans())
+def test_clipped_rows_simplex(seed, n, clip_mult, with_active):
+    adj, p, active, flat, recv, prev = _setting(seed, n, with_active)
+    A = mixing_matrix(jnp.asarray(adj), jnp.asarray(p), active=active)
+    gamma = clip_factors(jnp.asarray(recv), jnp.asarray(flat),
+                         jnp.asarray(prev), clip_mult)
+    A2 = np.asarray(clipped_matrix(A, gamma))
+    g = np.asarray(gamma)
+    assert np.all((g > 0) & (g <= 1.0))
+    assert np.all(A2 >= -1e-7)
+    np.testing.assert_allclose(A2.sum(axis=1), 1.0, atol=1e-5)
+    # clipping never increases an off-diagonal weight
+    off = ~np.eye(n, dtype=bool)
+    assert np.all(A2[off] <= np.asarray(A)[off] + 1e-7)
+    # an absent client's row stays e_k
+    if active is not None:
+        for k in np.nonzero(~active)[0]:
+            np.testing.assert_allclose(A2[k, k], 1.0, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(2, 8),
+       clip_mult=st.floats(0.5, 3.0))
+def test_clipping_idempotent_on_small_updates(seed, n, clip_mult):
+    """Peers within tau of self (here: recv == flat, distance 0) get
+    gamma == 1.0 exactly, so a second clipping pass is the bitwise
+    identity and off-diagonal weights are preserved bitwise."""
+    adj, p, _, flat, _, _ = _setting(seed, n, False)
+    # prev far from flat => tau is large; recv == flat => distances ~ 0
+    prev = flat - 10.0
+    A = mixing_matrix(jnp.asarray(adj), jnp.asarray(p))
+    gamma = clip_factors(jnp.asarray(flat), jnp.asarray(flat),
+                         jnp.asarray(prev), clip_mult)
+    np.testing.assert_array_equal(np.asarray(gamma),
+                                  np.ones((n, n), np.float32))
+    A2 = clipped_matrix(A, gamma)
+    A3 = clipped_matrix(A2, clip_factors(jnp.asarray(flat),
+                                         jnp.asarray(flat),
+                                         jnp.asarray(prev), clip_mult))
+    np.testing.assert_array_equal(np.asarray(A2), np.asarray(A3))
+    off = ~np.eye(n, dtype=bool)
+    np.testing.assert_array_equal(np.asarray(A2)[off], np.asarray(A)[off])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6), n=st.integers(2, 8),
+       b=st.integers(1, 4), clip_mult=st.floats(0.1, 3.0),
+       with_active=st.booleans())
+def test_clipped_sparse_weights_simplex(seed, n, b, clip_mult,
+                                        with_active):
+    rng = np.random.default_rng(seed)
+    idx = _nbr_lists(rng, n, b)
+    p = (rng.random(n) + 0.1).astype(np.float32)
+    active = (rng.random(n) < 0.7) if with_active else None
+    flat = rng.normal(size=(n, 5)).astype(np.float32)
+    prev = rng.normal(size=(n, 5)).astype(np.float32)
+    peers = rng.normal(size=(n, 5)).astype(np.float32)
+    self_w, nbr_w = sparse_mixing_weights(jnp.asarray(idx),
+                                          jnp.asarray(p), active=active)
+    safe = np.clip(idx, 0, n - 1)
+    gamma = clip_factors_sparse(jnp.asarray(peers)[safe],
+                                jnp.asarray(flat), jnp.asarray(prev),
+                                clip_mult)
+    sw, nw = clipped_sparse_weights(self_w, nbr_w, gamma)
+    sw, nw = np.asarray(sw), np.asarray(nw)
+    assert np.all(nw >= 0)
+    assert np.all(sw >= -1e-7)
+    np.testing.assert_allclose(sw + nw.sum(axis=1), 1.0, atol=1e-5)
+    # empty slots carry no weight; clipping never raises a peer weight
+    np.testing.assert_array_equal(nw[idx < 0], 0.0)
+    assert np.all(nw <= np.asarray(nbr_w) + 1e-7)
